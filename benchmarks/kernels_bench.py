@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks (paper §5.4 operators + LM/recsys hot paths).
+
+On this CPU container the Pallas kernels run in interpret mode (orders of
+magnitude slower than compiled TPU code), so the *wall-clock* rows here
+benchmark the jnp oracles — the compute the kernels replace — plus the
+tuple-at-a-time volcano floor; interpret-mode kernels are validated for
+correctness in tests/ and their TPU block shapes recorded here."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cosine_sim import cosine_sim_ref
+from repro.kernels.flash_attention import flash_attention_ref
+from repro.kernels.logreg import logreg_grad_ref
+from repro.kernels.matmul import matmul_ref
+from repro.kernels.embedding_bag import embedding_bag_ref
+
+
+def _bench(fn, *args, repeat=5):
+    fn_j = jax.jit(fn)
+    out = fn_j(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_j(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def kernel_microbench() -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    x = jnp.asarray(rng.standard_normal((1024, 512)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((512, 1024)), jnp.float32)
+    t = _bench(matmul_ref, x, y)
+    rows.append({"table": "kernels", "kernel": "matmul(1024x512x1024)",
+                 "oracle_s": t, "gflops": 2 * 1024 * 512 * 1024 / t / 1e9,
+                 "tpu_block": "bm=bn=bk=128 (MXU-aligned, 192KiB VMEM)"})
+    a = jnp.asarray(rng.standard_normal((2048, 256)), jnp.float32)
+    t = _bench(cosine_sim_ref, a, a)
+    rows.append({"table": "kernels", "kernel": "cosine_sim(2048x2048x256)",
+                 "oracle_s": t, "tpu_block": "fused rsqrt epilogue"})
+    X = jnp.asarray(rng.standard_normal((8192, 256)), jnp.float32)
+    yy = jnp.asarray(rng.integers(0, 2, 8192), jnp.float32)
+    w = jnp.zeros(256, jnp.float32)
+    t = _bench(logreg_grad_ref, X, yy, w)
+    rows.append({"table": "kernels", "kernel": "logreg_grad(8192x256)",
+                 "oracle_s": t, "tpu_block": "bn=512 row blocks, fused fwd+bwd"})
+    q = jnp.asarray(rng.standard_normal((4, 8, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((4, 2, 256, 64)), jnp.float32)
+    t = _bench(lambda q_, k_, v_: flash_attention_ref(q_, k_, v_), q, k, k)
+    rows.append({"table": "kernels", "kernel": "flash_attention(4x8x256x64 GQA)",
+                 "oracle_s": t, "tpu_block": "bq=bk=128, online softmax"})
+    table = jnp.asarray(rng.standard_normal((100_000, 64)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 100_000, (4096, 16)), jnp.int32)
+    t = _bench(embedding_bag_ref, table, idx)
+    rows.append({"table": "kernels", "kernel": "embedding_bag(4096x16, 100k x 64)",
+                 "oracle_s": t, "tpu_block": "scalar-prefetch row DMA"})
+    return rows

@@ -1,0 +1,77 @@
+"""Benchmark driver: one function per paper table. Prints
+``name,us_per_call,derived`` CSV rows plus a readable summary.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--sf 1] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=int, default=1)
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the scale-factor sweep")
+    args = ap.parse_args()
+
+    from . import m2bench_suite as m2
+    from .kernels_bench import kernel_microbench
+
+    print("name,us_per_call,derived")
+    all_rows: list[dict] = []
+
+    # Figs. 7-8 + Fig. 10: GCDI ablation & graph workloads
+    rows = m2.graph_workloads(sf=args.sf)
+    all_rows += rows
+    for r in rows:
+        if "gredo_s" in r and "single_s" in r:
+            print(f"gcdi_{r['query']}_sf{r['sf']},{r['gredo_s']*1e6:.1f},"
+                  f"speedup_vs_single={r['speedup_vs_single']:.2f};"
+                  f"speedup_vs_dual={r['speedup_vs_dual']:.2f};"
+                  f"io_gredo={r['gredo_io']};io_single={r['single_io']}")
+        elif "gredo_s" in r:
+            print(f"gcdi_{r['query']}_sf{r['sf']},{r['gredo_s']*1e6:.1f},"
+                  f"reachable={r.get('reachable')}")
+
+    # Figs. 9/12: GCDA ablation
+    rows = m2.gcda_ablation(sf=args.sf)
+    all_rows += rows
+    for r in rows:
+        print(f"gcda_{r['task']}_sf{r['sf']},{r['batch_s']*1e6:.1f},"
+              f"volcano_speedup={r['speedup']:.1f}")
+
+    # §6.4 inter-buffer reuse
+    rows = m2.interbuffer_reuse(sf=args.sf)
+    all_rows += rows
+    for r in rows:
+        print(f"interbuffer_reuse_sf{r['sf']},{r['warm_s']*1e6:.1f},"
+              f"reuse_speedup={r['reuse_speedup']:.0f}")
+
+    # Table 5 flavor: scale factors
+    if not args.fast:
+        rows = m2.scale_factors()
+        all_rows += rows
+        for r in rows:
+            print(f"scale_sf{r['sf']}_{r['mode']},{r['SUM_s']*1e6:.1f},"
+                  f"geomean_us={r['GEOMEAN_s']*1e6:.1f}")
+
+    # kernel microbench
+    rows = kernel_microbench()
+    all_rows += rows
+    for r in rows:
+        d = f"gflops={r.get('gflops', 0):.1f};" if "gflops" in r else ""
+        print(f"kernel_{r['kernel'].split('(')[0]},{r['oracle_s']*1e6:.1f},"
+              f"{d}block={r['tpu_block']}")
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print("# full records -> experiments/bench_results.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving example: batched prefill + autoregressive decode with a KV cache
+(the decode_32k dry-run cell's code path at toy scale).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (TransformerConfig, init_cache,
+                                      init_params, forward, serve_step)
+
+
+def main():
+    cfg = TransformerConfig(name="serve-demo", n_layers=4, d_model=256,
+                            n_heads=8, n_kv_heads=2, d_ff=512, vocab=4096,
+                            dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, P, G = 4, 64, 48
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+
+    prefill = jax.jit(lambda p, c, t: forward(
+        p, t, cfg, cache=c, cache_lengths=jnp.zeros((B,), jnp.int32)))
+    decode = jax.jit(lambda p, c, t, l: serve_step(p, c, t, l, cfg))
+
+    cache = init_cache(cfg, B, P + G)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, cache, prompts)
+    nxt = jnp.argmax(logits[:, -1], -1)[:, None]
+    lengths = jnp.full((B,), P, jnp.int32)
+    toks = [nxt]
+    for _ in range(G - 1):
+        logits, cache = decode(params, cache, nxt, lengths)
+        nxt = jnp.argmax(logits, -1)[:, None]
+        lengths = lengths + 1
+        toks.append(nxt)
+    jax.block_until_ready(nxt)
+    dt = time.perf_counter() - t0
+    out = jnp.concatenate(toks, 1)
+    print(f"[serve] {B} requests x ({P} prompt + {G} generated) "
+          f"in {dt:.2f}s ({B*G/dt:.0f} tok/s incl. compile)")
+    print("[serve] continuation of request 0:", out[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-family LM for a few
+hundred steps with the full production substrate — deterministic data
+pipeline, AdamW, gradient accumulation, async checkpointing, an injected
+mid-run failure, and automatic restore-and-replay.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.lm import TokenStream
+from repro.distributed.fault import FailureInjector
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.train.loop import Trainer, TrainerConfig
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: 8L x d512 (qwen2 family: GQA + QKV bias + SwiGLU + tied)
+    cfg = TransformerConfig(
+        name="qwen2-100m", n_layers=8, d_model=512, n_heads=8, n_kv_heads=2,
+        d_ff=1536, vocab=32768, qkv_bias=True, tie_embeddings=True,
+        mlp="swiglu", dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(x.size) for x in jax.tree.leaves(params))
+    print(f"[train_lm] {cfg.name}: {n/1e6:.1f}M params")
+
+    stream = TokenStream(vocab=cfg.vocab, batch=4, seq=128)
+
+    def data_at(step):
+        b = stream.batch_at(step)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    trainer = Trainer(
+        lambda p, b: loss_fn(p, b, cfg), params, data_at,
+        TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                      ckpt_dir=args.ckpt_dir, microbatch=2, log_every=25),
+        opt_cfg=AdamWConfig(lr=1e-3),
+        failure_injector=FailureInjector(fail_at=(args.steps // 2,)))
+    print(f"[train_lm] training {args.steps} steps with an injected failure "
+          f"at step {args.steps // 2} (watch the restart)...")
+    result = trainer.run_with_restarts()
+    for m in result["metrics"]:
+        print(f"  step {m['step']:4d}  loss {m['loss']:.4f}  "
+              f"{m['seconds']*1e3:6.0f} ms{'  [straggler]' if m['straggler'] else ''}")
+    first, last = result["metrics"][0]["loss"], result["metrics"][-1]["loss"]
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} "
+          f"({'OK' if last < first else 'NOT LEARNING'}); "
+          f"survived injected failure via checkpoint restore")
+
+
+if __name__ == "__main__":
+    main()

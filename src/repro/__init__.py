@@ -1,0 +1,3 @@
+"""repro: GredoJAX — graph-centric cross-model data integration & analytics
+(GredoDB reproduction) plus the multi-arch JAX/TPU training framework."""
+__version__ = "0.1.0"

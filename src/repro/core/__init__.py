@@ -1,0 +1,13 @@
+"""GredoDB core: unified multi-model storage, graph-centric operators,
+GCDI optimizer, and parallel GCDA (the paper's contribution)."""
+from .engine import GredoEngine
+from .interbuffer import InterBuffer
+from .schema import (AnalyticsTask, GCDIATask, JoinPred, Pattern, Predicate,
+                     Query, chain_pattern)
+from .storage import Database, Graph, Table, shred_documents
+
+__all__ = [
+    "GredoEngine", "InterBuffer", "Database", "Graph", "Table",
+    "shred_documents", "Query", "Pattern", "Predicate", "JoinPred",
+    "AnalyticsTask", "GCDIATask", "chain_pattern",
+]

@@ -1,0 +1,178 @@
+"""GredoEngine — the unified query processing engine facade (paper Fig. 2).
+
+GCDI: parse(SFMW AST) -> plan (optimizer §6.2) -> execute (operators §5).
+GCDA: materialize matrices into the inter-buffer -> invoke parallel
+analytical operators -> reuse via structural plan matching (§6.4).
+
+``mode`` selects the ablation variant (§7.2):
+  * "gredo"   — full system (operators + optimizations)      [GredoDB]
+  * "dual"    — topology traversal, no pushdown/optimization  [GredoDB-D]
+  * "single"  — no topology store: matches run as edge-table
+                equi-joins in the relational engine           [GredoDB-S]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import analytics, join as join_mod, pattern as pattern_mod, planner
+from .interbuffer import InterBuffer, fingerprint
+from .schema import AnalyticsTask, GCDIATask, Pattern, Query
+from .storage import Database, Graph, Table
+from . import traversal
+
+
+@dataclasses.dataclass
+class ExecStats:
+    plan_notes: list
+    seconds: float
+    record_fetches: int
+    cpu_ops: int
+    interbuffer_hit: bool = False
+
+
+class GredoEngine:
+    def __init__(self, db: Database, mode: str = "gredo",
+                 interbuffer_bytes: int = 2 << 30):
+        assert mode in ("gredo", "dual", "single")
+        self.db = db
+        self.mode = mode
+        self.interbuffer = InterBuffer(interbuffer_bytes)
+        self.last_stats: Optional[ExecStats] = None
+
+    # ------------------------------------------------------------------ GCDI
+    def plan(self, q: Query) -> planner.GCDIPlan:
+        enable_opt = self.mode == "gredo"
+        return planner.plan(self.db, q, enable_opt=enable_opt,
+                            enable_pattern_pushdown=enable_opt)
+
+    def query(self, q: Query) -> Table:
+        traversal.COUNTERS.reset()
+        t0 = time.perf_counter()
+        if self.mode == "single":
+            result = self._execute_single_engine(q)
+            notes = ["single-engine: match via edge-table equi-joins"]
+        else:
+            p = self.plan(q)
+            result = planner.execute(self.db, p)
+            notes = p.notes
+        self.last_stats = ExecStats(
+            plan_notes=notes, seconds=time.perf_counter() - t0,
+            record_fetches=traversal.COUNTERS.record_fetches,
+            cpu_ops=traversal.COUNTERS.cpu_ops)
+        return result
+
+    def _execute_single_engine(self, q: Query) -> Table:
+        """GredoDB-S: translate the match into multi-way joins over the edge
+        table (the TBS strategy §2.2) then run the rest of the plan."""
+        if q.match is None:
+            p = planner.plan(self.db, q, enable_opt=False)
+            return planner.execute(self.db, p)
+        g = self.db.graphs[q.match.graph]
+        rel = _match_by_joins(g, q.match)
+        # wrap: substitute the join-produced graph-relation for the match,
+        # then evaluate the pattern predicates post-hoc (no pushdown in TBS)
+        p = planner.plan(self.db, q, enable_opt=False)
+        deferred = p.pattern_plan.deferred if p.pattern_plan else {}
+        orig_match = pattern_mod.match
+        pattern_mod.match = lambda *_a, **_k: pattern_mod.apply_deferred(
+            g, q.match, rel, deferred)
+        try:
+            return planner.execute(self.db, p)
+        finally:
+            pattern_mod.match = orig_match
+
+    # ------------------------------------------------------------------ GCDA
+    def analyze(self, task: GCDIATask, *, use_kernel: bool | None = None,
+                iters: int = 100):
+        """Run a full GCDIA: GCDI -> G (matrix gen) -> A (parallel op)."""
+        key = fingerprint(task.integration, task.analytics.op,
+                          task.analytics.inputs, self.mode)
+        cached = self.interbuffer.get(key)
+        if cached is not None:
+            if self.last_stats:
+                self.last_stats.interbuffer_hit = True
+            return cached
+        gcdi_result = self.query(task.integration)
+        mats = []
+        for spec in task.analytics.inputs:
+            kind = spec[0]
+            if kind == "rel2matrix":
+                mats.append(analytics.rel2matrix(gcdi_result, spec[1]))
+            elif kind == "random":
+                m, _ = analytics.random_access_matrix(
+                    gcdi_result, spec[1], spec[2], spec[3])
+                mats.append(m)
+            elif kind == "const":
+                mats.append(jnp.asarray(spec[1]))
+            else:
+                raise ValueError(kind)
+        op = task.analytics.op
+        if op == "MULTIPLY":
+            rhs = mats[1] if len(mats) > 1 else mats[0].T  # Gram product default
+            out = analytics.multiply(mats[0], rhs, use_kernel=use_kernel)
+        elif op == "SIMILARITY":
+            out = analytics.similarity(mats[0], mats[1] if len(mats) > 1 else mats[0],
+                                       use_kernel=use_kernel)
+        elif op == "REGRESSION":
+            labels = mats[1].reshape(-1) if len(mats) > 1 else None
+            if labels is None:
+                raise ValueError("REGRESSION needs (features, labels)")
+            out = analytics.regression(mats[0], labels, iters=iters,
+                                       use_kernel=use_kernel)[0]
+        else:
+            raise ValueError(op)
+        return self.interbuffer.put(key, out)
+
+    # ------------------------------------------------------- graph utilities
+    def shortest_path(self, graph: str, src_label: str, src_vids, dst_label: str,
+                      dst_vids) -> np.ndarray:
+        g = self.db.graphs[graph]
+        return pattern_mod.shortest_path_lengths(
+            g, g.nid_of(src_label, src_vids), g.nid_of(dst_label, dst_vids))
+
+
+def _match_by_joins(g: Graph, pat: Pattern) -> Table:
+    """TBS-style pattern matching: k-hop pattern == k-way self-join of the
+    edge table on svid/tvid (index-accelerated in AgensGraph; sort-merge
+    here). No topology store, no pushdown — intermediate results grow
+    multiplicatively, which is exactly the §2.2 critique."""
+    chain_vars = [pat.vertices[0].var] + [e.dst for e in pat.edges]
+    edge_vars = [e.var for e in pat.edges]
+    if not edge_vars:  # vertex-only pattern: full vertex scan
+        var = pat.vertices[0].var
+        n = g.vertex_tables[pat.vertex(var).label].nrows
+        traversal.COUNTERS.record_fetches += n
+        return Table("join0", {var: np.arange(n)})
+    svid = np.asarray(g.edges.col("svid"))
+    tvid = np.asarray(g.edges.col("tvid"))
+    traversal.COUNTERS.record_fetches += 2 * len(svid) * max(len(edge_vars), 1)
+
+    cols = {chain_vars[0]: svid, edge_vars[0]: np.arange(g.edges.nrows),
+            chain_vars[1]: tvid}
+    cur = Table("join0", cols)
+    for h in range(1, len(edge_vars)):
+        # join cur.tail == edges.svid
+        order = np.argsort(svid, kind="stable")
+        svid_s = svid[order]
+        tail = np.asarray(cur.col(chain_vars[h]))
+        lo = np.searchsorted(svid_s, tail, "left")
+        hi = np.searchsorted(svid_s, tail, "right")
+        counts = hi - lo
+        total = int(counts.sum())
+        traversal.COUNTERS.cpu_ops += total
+        traversal.COUNTERS.record_fetches += total
+        l_rep = np.repeat(np.arange(len(tail)), counts)
+        out_off = np.zeros(len(tail) + 1, dtype=np.int64)
+        np.cumsum(counts, out=out_off[1:])
+        pos = np.repeat(lo, counts) + (np.arange(total) - np.repeat(out_off[:-1], counts))
+        eids = order[pos]
+        ncols = {k: np.asarray(v)[l_rep] for k, v in cur.columns.items()}
+        ncols[edge_vars[h]] = eids
+        ncols[chain_vars[h + 1]] = tvid[eids]
+        cur = Table(f"join{h}", ncols)
+    return cur

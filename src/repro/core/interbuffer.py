@@ -1,0 +1,61 @@
+"""In-memory inter-buffer for matrix storage (paper §4.2, §6.4).
+
+Materializes GCDI results as device-resident matrices that analytical
+operators consume directly (no tuple-at-a-time production). Entries are
+keyed by a *structural fingerprint* of the producing GCDI plan + matrix
+generation spec, so semantically-equivalent GCDIA tasks reuse materialized
+outputs without re-execution (paper: "intermediate results in the
+inter-buffer are reused across analytical tasks via structural matching of
+GCDI plans").
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fingerprint(*parts: Any) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(repr(p).encode())
+    return h.hexdigest()[:16]
+
+
+class InterBuffer:
+    def __init__(self, capacity_bytes: int = 2 << 30):
+        self.capacity_bytes = capacity_bytes
+        self._store: dict[str, jax.Array] = {}
+        self._order: list[str] = []
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[jax.Array]:
+        if key in self._store:
+            self.hits += 1
+            self._order.remove(key)
+            self._order.append(key)
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: str, mat: jax.Array) -> jax.Array:
+        mat = jnp.asarray(mat)
+        self._store[key] = mat
+        self._order.append(key)
+        self._evict()
+        return mat
+
+    def nbytes(self) -> int:
+        return sum(int(v.size) * v.dtype.itemsize for v in self._store.values())
+
+    def _evict(self):
+        while self.nbytes() > self.capacity_bytes and len(self._order) > 1:
+            victim = self._order.pop(0)
+            del self._store[victim]
+
+    def clear(self):
+        self._store.clear()
+        self._order.clear()

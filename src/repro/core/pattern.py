@@ -1,0 +1,293 @@
+"""Topology- and attribute-aware pattern matching (paper §5.2, Algorithm 2).
+
+Vectorized re-derivation: Algorithm 2's DFS stack over partial paths becomes
+whole-frontier expansion — at hop i the set of valid partial paths is a
+(n_paths, i+1) binding matrix; one CSR gather advances every path at once.
+Semantics (the multiset of matched bindings) are identical; property tests
+check against a literal transcription of the pseudocode.
+
+Attribute-awareness (Fig. 6):
+  * rule-based: single-sided predicates are pushed and traversal starts from
+    the predicate side (forward/reverse);
+  * cost-based: with predicates on both ends, effective cardinalities
+    |M(v)| * S_phi(v) decide the start side; end-vertex equality predicates are
+    always pushed, inequality deferred, range predicates cost-compared.
+Query-aware traversal pruning (§6.2): hops whose target carries no predicate
+and is not projected skip the record fetch entirely (topology-only gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import cost as cost_mod
+from . import traversal
+from .schema import Pattern, Predicate
+from .storage import Graph, Table
+
+
+@dataclasses.dataclass
+class PatternPlan:
+    pattern: Pattern
+    reverse: bool                       # traversal direction (Fig. 6)
+    pushed: dict                        # var -> [Predicate] evaluated before traversal
+    deferred: dict                      # var -> [Predicate] evaluated on the graph-relation
+    fetch_vars: set                     # vars whose records must be fetched (projection/deferred)
+    est_cost: float = 0.0
+
+    def describe(self) -> str:
+        d = "reverse" if self.reverse else "forward"
+        return (f"PatternPlan(dir={d}, pushed={{{', '.join(f'{k}:{v}' for k, v in self.pushed.items())}}}, "
+                f"deferred={{{', '.join(f'{k}:{v}' for k, v in self.deferred.items())}}}, "
+                f"fetch={sorted(self.fetch_vars)})")
+
+
+def _predicate_selectivity(tbl: Table, preds: list[Predicate]) -> float:
+    s = 1.0
+    for p in preds:
+        s *= tbl.stats(p.column).selectivity(p)
+    return s
+
+
+def plan_pattern(g: Graph, pattern: Pattern, phi: dict[str, list[Predicate]],
+                 projected: set[str], force_reverse: Optional[bool] = None,
+                 enable_pushdown: bool = True) -> PatternPlan:
+    """Choose direction + pushdown set per Fig. 6. ``phi`` maps pattern var ->
+    predicates (the predicate assignment function), ``projected`` lists vars
+    referenced by the enclosing projection."""
+    chain_vars = [pattern.vertices[0].var] + [e.dst for e in pattern.edges]
+    src_var, dst_var = chain_vars[0], chain_vars[-1]
+    pushed: dict[str, list[Predicate]] = {}
+    deferred: dict[str, list[Predicate]] = {v: list(ps) for v, ps in phi.items() if ps}
+
+    if not enable_pushdown:
+        reverse = bool(force_reverse)
+        fetch = set(projected) | set(deferred)
+        return PatternPlan(pattern, reverse, {}, deferred, fetch)
+
+    def tbl_of(var: str) -> Table:
+        return g.vertex_tables[pattern.vertex(var).label]
+
+    s_preds = deferred.get(src_var, [])
+    t_preds = deferred.get(dst_var, [])
+
+    if s_preds and not t_preds:
+        reverse = False                      # Fig. 6(a): start from predicate side
+    elif t_preds and not s_preds:
+        reverse = True                       # Fig. 6(b)
+    elif s_preds and t_preds:                # Fig. 6(c): cost-based
+        cs = tbl_of(src_var).nrows * _predicate_selectivity(tbl_of(src_var), s_preds)
+        ct = tbl_of(dst_var).nrows * _predicate_selectivity(tbl_of(dst_var), t_preds)
+        reverse = ct < cs
+    else:
+        # no end predicates: start from the smaller candidate set
+        reverse = tbl_of(dst_var).nrows < tbl_of(src_var).nrows
+    if force_reverse is not None:
+        reverse = force_reverse
+
+    start_var = dst_var if reverse else src_var
+    end_var = src_var if reverse else dst_var
+
+    # start-side predicates always pushed (they define the initial frontier)
+    if deferred.get(start_var):
+        pushed[start_var] = deferred.pop(start_var)
+
+    # end-vertex rules: equality -> push; inequality -> defer; range -> cost
+    if deferred.get(end_var):
+        push_list, defer_list = [], []
+        tbl = tbl_of(end_var)
+        for p in deferred[end_var]:
+            if p.is_equality or p.op == "in":
+                push_list.append(p)
+            elif p.is_inequality:
+                defer_list.append(p)
+            else:  # range: compare push vs defer costs (§6.3)
+                if cost_mod.should_push_range(g, tbl, p):
+                    push_list.append(p)
+                else:
+                    defer_list.append(p)
+        if push_list:
+            pushed[end_var] = push_list
+        if defer_list:
+            deferred[end_var] = defer_list
+        else:
+            deferred.pop(end_var)
+
+    # interior vertices / edges: equality+in pushed (columnar mask is cheap),
+    # everything else deferred
+    for var in list(deferred):
+        if var in (start_var, end_var):
+            continue
+        push_list = [p for p in deferred[var] if p.is_equality or p.op == "in" or p.is_range]
+        defer_list = [p for p in deferred[var] if not (p.is_equality or p.op == "in" or p.is_range)]
+        if push_list:
+            pushed.setdefault(var, []).extend(push_list)
+        if defer_list:
+            deferred[var] = defer_list
+        else:
+            deferred.pop(var)
+
+    fetch = set(projected) | set(deferred)
+    return PatternPlan(pattern, reverse, pushed, deferred, fetch)
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def _candidate_mask(g: Graph, pattern: Pattern, var: str,
+                    preds: list[Predicate]) -> Optional[np.ndarray]:
+    """M(v_p) after pushdown: boolean mask over the label's vid space
+    (Lines 3-7 of Algorithm 2 with the §5.2 pushdown modification)."""
+    if not preds:
+        return None
+    is_edge = any(e.var == var for e in pattern.edges)
+    tbl = g.edges if is_edge else g.vertex_tables[pattern.vertex(var).label]
+    mask = np.ones(tbl.nrows, dtype=bool)
+    for p in preds:
+        mask &= tbl.eval_predicate(p)
+        traversal.COUNTERS.record_fetches += tbl.nrows  # pushdown scans the column
+        traversal.COUNTERS.cpu_ops += tbl.nrows
+    return mask
+
+
+def match(g: Graph, plan: PatternPlan) -> Table:
+    """Execute P(G, P): returns the graph-relation as a Table with one column
+    per pattern var — vertex columns hold vids, edge columns hold edge tids."""
+    pattern = plan.pattern
+    chain_vars = [pattern.vertices[0].var] + [e.dst for e in pattern.edges]
+    edge_vars = [e.var for e in pattern.edges]
+
+    hop_vars = list(chain_vars)
+    hop_edges = list(edge_vars)
+    if plan.reverse:
+        hop_vars = hop_vars[::-1]
+        hop_edges = hop_edges[::-1]
+
+    # vertex candidate member tables over nid space
+    member: dict[str, Optional[np.ndarray]] = {}
+    for v in chain_vars:
+        m = _candidate_mask(g, pattern, v, plan.pushed.get(v, []))
+        if m is not None:
+            lo, hi = g.label_range(pattern.vertex(v).label)
+            full = np.zeros(g.n_vertices, dtype=bool)
+            full[lo:hi] = m
+            member[v] = full
+        else:
+            member[v] = None
+    edge_mask: dict[str, Optional[np.ndarray]] = {
+        e: _candidate_mask(g, pattern, e, plan.pushed.get(e, [])) for e in edge_vars}
+
+    # initial frontier (Line 9): candidates of the first hop var
+    v0 = hop_vars[0]
+    lo, hi = g.label_range(pattern.vertex(v0).label)
+    if member[v0] is not None:
+        start_nids = np.nonzero(member[v0][lo:hi])[0] + lo
+    else:
+        start_nids = np.arange(lo, hi)
+
+    csr = g.rev if plan.reverse else g.fwd
+    paths_v = [start_nids]          # per-var nid columns, in hop order
+    paths_e: list[np.ndarray] = []  # per-edge tid columns
+    n_paths = len(start_nids)
+    row_ids = None                  # implicit: arange(n_paths)
+
+    for hop, (evar, nvar) in enumerate(zip(hop_edges, hop_vars[1:])):
+        frontier = paths_v[-1]
+        deg = csr.row_ptr[frontier + 1] - csr.row_ptr[frontier]
+        total = int(deg.sum())
+        traversal.COUNTERS.cpu_ops += total + len(frontier)
+        row_rep = np.repeat(np.arange(len(frontier)), deg)
+        out_off = np.zeros(len(frontier) + 1, dtype=np.int64)
+        np.cumsum(deg, out=out_off[1:])
+        pos = np.repeat(csr.row_ptr[frontier], deg) + (
+            np.arange(total) - np.repeat(out_off[:-1], deg))
+        dst = csr.col_idx[pos].astype(np.int64)
+        eid = csr.edge_id[pos].astype(np.int64)
+
+        keep = np.ones(total, dtype=bool)
+        if member[nvar] is not None:
+            keep &= member[nvar][dst]
+            traversal.COUNTERS.cpu_ops += total
+        else:
+            # label constraint: dst must fall in nvar's label nid range
+            lo, hi = g.label_range(pattern.vertex(nvar).label)
+            if not (lo == 0 and hi == g.n_vertices):
+                keep &= (dst >= lo) & (dst < hi)
+        if edge_mask[evar] is not None:
+            keep &= edge_mask[evar][eid]
+            traversal.COUNTERS.cpu_ops += total
+
+        row_rep, dst, eid = row_rep[keep], dst[keep], eid[keep]
+        paths_v = [c[row_rep] for c in paths_v]
+        paths_e = [c[row_rep] for c in paths_e]
+        paths_v.append(dst)
+        paths_e.append(eid)
+
+    if plan.reverse:
+        paths_v = paths_v[::-1]
+        paths_e = paths_e[::-1]
+
+    cols: dict[str, np.ndarray] = {}
+    for var, col in zip(chain_vars, paths_v):
+        cols[var] = g.vids_of(col)  # store vids (label-local) in the graph-relation
+    for evar, col in zip(edge_vars, paths_e):
+        cols[evar] = col
+
+    rel = Table(f"match:{pattern.graph}", cols)
+
+    # deferred predicate evaluation on the graph-relation (Cost_prop, Eq. 13)
+    return apply_deferred(g, pattern, rel, plan.deferred)
+
+
+def apply_deferred(g: Graph, pattern: Pattern, rel: Table, deferred: dict) -> Table:
+    """Evaluate deferred predicates on a materialized graph-relation."""
+    edge_vars = [e.var for e in pattern.edges]
+    if not deferred or not rel.nrows:
+        return rel
+    mask = np.ones(rel.nrows, dtype=bool)
+    for var, preds in deferred.items():
+        is_edge = var in edge_vars
+        tbl = g.edges if is_edge else g.vertex_tables[pattern.vertex(var).label]
+        ids = np.asarray(rel.col(var))
+        traversal.COUNTERS.record_fetches += len(ids) * len(preds)
+        for p in preds:
+            col_mask = tbl.eval_predicate(p)
+            mask &= col_mask[ids]
+            traversal.COUNTERS.cpu_ops += len(ids)
+    return rel.take(np.nonzero(mask)[0])
+
+
+# ---------------------------------------------------------------------------
+# Shortest-path search (topology-only GraphAM; powers M2Bench G6-G8)
+# ---------------------------------------------------------------------------
+
+
+def shortest_path_lengths(g: Graph, src_nids: np.ndarray, dst_nids: np.ndarray,
+                          max_hops: int = 64) -> np.ndarray:
+    """Multi-source BFS over the CSR topology (no record access — the pure
+    topology-driven mode the hybrid operator also supports). Returns hop
+    distance per (src, dst) pair, -1 if unreachable."""
+    src_nids = np.asarray(src_nids)
+    dst_nids = np.asarray(dst_nids)
+    out = np.full(len(src_nids), -1, dtype=np.int32)
+    # group by src to share BFS frontiers
+    uniq, inv = np.unique(src_nids, return_inverse=True)
+    for i, s in enumerate(uniq):
+        dist = np.full(g.n_vertices, -1, dtype=np.int32)
+        dist[s] = 0
+        frontier = np.array([s])
+        for h in range(1, max_hops + 1):
+            _, nxt, _ = g.fwd.neighbors(frontier)
+            nxt = np.unique(nxt)
+            nxt = nxt[dist[nxt] < 0]
+            if len(nxt) == 0:
+                break
+            dist[nxt] = h
+            frontier = nxt
+        sel = inv == i
+        out[sel] = dist[dst_nids[sel]]
+    return out

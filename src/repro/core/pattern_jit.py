@@ -1,0 +1,121 @@
+"""Device-resident (jit-able) pattern matching: fixed-capacity padded
+frontiers with overflow-detect-and-retry (the DESIGN §2 static-shape
+adaptation — the TPU analogue of buffer-pool spill).
+
+The host engine (core.pattern) is the system of record; this module is the
+accelerator path: a one-hop-at-a-time frontier expansion where every array
+has a static capacity, compiled once per (capacity, graph-shape) and reused
+across queries. The planner's cardinality estimates choose the initial
+capacity; on overflow the wrapper doubles and re-runs (amortized O(1)
+recompiles thanks to power-of-two capacities).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .storage import Graph
+
+
+@functools.partial(jax.jit, static_argnames=("capacity",))
+def expand_frontier(row_ptr: jax.Array, col_idx: jax.Array,
+                    edge_id: jax.Array, frontier: jax.Array,
+                    frontier_mask: jax.Array, member: jax.Array,
+                    edge_mask: jax.Array, *, capacity: int):
+    """One hybrid-traversal hop on device.
+
+    frontier: (C,) padded nids; member/edge_mask: boolean tables over nids /
+    edge tids (the pushed predicates). Returns (src_slot, dst, eid, mask,
+    overflowed): all (capacity,) padded outputs where ``src_slot`` indexes
+    into the INPUT frontier (so callers can join path prefixes).
+    """
+    C = frontier.shape[0]
+    deg = jnp.where(frontier_mask,
+                    row_ptr[frontier + 1] - row_ptr[frontier], 0)
+    out_off = jnp.cumsum(deg) - deg                     # exclusive prefix sum
+    total = jnp.sum(deg)
+    overflowed = total > capacity
+
+    # slot i of the output belongs to the frontier entry whose out_off range
+    # covers i: searchsorted over the (sorted) offsets
+    slots = jnp.arange(capacity)
+    src_slot = jnp.clip(
+        jnp.searchsorted(out_off, slots, side="right") - 1, 0, C - 1)
+    within = slots - out_off[src_slot]
+    valid = slots < jnp.minimum(total, capacity)
+    src_nid = frontier[src_slot]
+    pos = jnp.clip(row_ptr[src_nid] + within, 0, col_idx.shape[0] - 1)
+    dst = col_idx[pos].astype(jnp.int32)
+    eid = edge_id[pos].astype(jnp.int32)
+    valid &= member[jnp.clip(dst, 0, member.shape[0] - 1)]
+    valid &= edge_mask[jnp.clip(eid, 0, edge_mask.shape[0] - 1)]
+    return src_slot, dst, eid, valid, overflowed
+
+
+class DevicePatternMatcher:
+    """Chain-pattern matching fully on device with capacity retry."""
+
+    def __init__(self, g: Graph, initial_capacity: int = 1 << 12,
+                 max_capacity: int = 1 << 26):
+        self.g = g
+        self.row_ptr = jnp.asarray(g.fwd.row_ptr)
+        self.col_idx = jnp.asarray(g.fwd.col_idx)
+        self.edge_id = jnp.asarray(g.fwd.edge_id)
+        self.initial_capacity = initial_capacity
+        self.max_capacity = max_capacity
+        self.recompiles = 0
+
+    def match_chain(self, start_nids: np.ndarray,
+                    vertex_members: list[Optional[np.ndarray]],
+                    edge_masks: list[Optional[np.ndarray]]):
+        """vertex_members[h]: bool table over nids for hop-h target (None =
+        label-unconstrained); edge_masks[h] likewise over edge tids.
+        Returns (columns, masks): per-hop nid columns of the matched paths.
+        """
+        n, m = self.g.n_vertices, self.g.edges.nrows
+        hops = len(edge_masks)
+        cap = max(self.initial_capacity, 1 << int(np.ceil(np.log2(
+            max(len(start_nids), 1)))))
+
+        while True:
+            cols, ok = self._run(start_nids, vertex_members, edge_masks, cap)
+            if ok:
+                return cols
+            if cap >= self.max_capacity:
+                raise RuntimeError(f"pattern frontier exceeded max capacity "
+                                   f"{self.max_capacity}")
+            cap *= 2
+            self.recompiles += 1
+
+    def _run(self, start_nids, vertex_members, edge_masks, cap):
+        n, m = self.g.n_vertices, self.g.edges.nrows
+        ones_v = jnp.ones((n,), bool)
+        ones_e = jnp.ones((max(m, 1),), bool)
+
+        C0 = len(start_nids)
+        frontier = jnp.zeros((cap,), jnp.int32).at[:C0].set(
+            jnp.asarray(start_nids, jnp.int32))
+        fmask = jnp.zeros((cap,), bool).at[:C0].set(True)
+        path_cols = [frontier]
+        path_mask = fmask
+
+        for h, (vm, em) in enumerate(zip(vertex_members, edge_masks)):
+            member = ones_v if vm is None else jnp.asarray(vm)
+            emask = ones_e if em is None else jnp.asarray(em)
+            src_slot, dst, eid, valid, overflow = expand_frontier(
+                self.row_ptr, self.col_idx, self.edge_id,
+                path_cols[-1], path_mask, member, emask, capacity=cap)
+            if bool(overflow):
+                return None, False
+            # re-join path prefixes through src_slot
+            path_cols = [c[src_slot] for c in path_cols]
+            path_cols.append(dst)
+            path_mask = valid & path_mask[src_slot]
+
+        # compact on host (final materialization = the graph-relation)
+        keep = np.asarray(path_mask)
+        return [np.asarray(c)[keep] for c in path_cols], True

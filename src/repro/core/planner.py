@@ -1,0 +1,404 @@
+"""GCDI plan generation + optimization framework (paper §6.1-6.3).
+
+Four mechanisms, as in the paper:
+  1. *Graph predicate pushdown* — predicates on pattern vars are assigned to
+     the pattern (Phi) and pushed per the Fig. 6 rule/cost strategies; and
+     predicates on a rel/doc collection joined with a pattern vertex on the
+     same attribute are *replicated* onto the graph side (transitivity).
+  2. *Join pushdown* — Eq. (8) -> Eq. (9)/(10): a join between a table and the
+     graph-relation is rewritten (cost-based) into a semi-join that shrinks
+     the graph's candidate vertex sets *before* matching.
+  3. *GCDI rewriting* — match trimming (patterns with no topology constraint
+     -> record scan; v-e-v patterns touching only edges -> edge scan) and
+     projection trimming (drop graph-projection columns never referenced).
+  4. *Query-aware traversal pruning* — carried by PatternPlan.fetch_vars:
+     unreferenced, predicate-free pattern vars never fetch records.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import cost as cost_mod
+from . import join as join_mod
+from . import pattern as pattern_mod
+from .schema import JoinPred, Pattern, Predicate, Query
+from .storage import Database, Graph, Table
+
+
+@dataclasses.dataclass
+class GCDIPlan:
+    query: Query
+    pattern_plan: Optional[pattern_mod.PatternPlan]
+    table_pushdown: dict                  # collection -> [Predicate]
+    residual: list                        # predicates evaluated post-join
+    semi_join_idx: set                    # indices into query.joins executed as graph semi-joins
+    graph_projection: set                 # pattern vars kept after projection trimming
+    match_trim: Optional[str]             # None | "vertex_scan" | "edge_scan"
+    notes: list = dataclasses.field(default_factory=list)
+
+    def explain(self) -> str:
+        lines = ["GCDI plan:"]
+        for c, ps in self.table_pushdown.items():
+            lines.append(f"  σ-pushdown[{c}]: {ps}")
+        if self.pattern_plan:
+            lines.append("  " + self.pattern_plan.describe())
+        if self.match_trim:
+            lines.append(f"  match-trimming: {self.match_trim}")
+        if self.semi_join_idx:
+            lines.append(f"  join-pushdown (Eq.9/10) on joins {sorted(self.semi_join_idx)}")
+        lines.append(f"  graph-projection A' = {sorted(self.graph_projection)}")
+        if self.residual:
+            lines.append(f"  residual σ: {self.residual}")
+        lines.extend("  note: " + n for n in self.notes)
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Planning
+# ---------------------------------------------------------------------------
+
+
+def plan(db: Database, q: Query, enable_opt: bool = True,
+         enable_pattern_pushdown: Optional[bool] = None) -> GCDIPlan:
+    if enable_pattern_pushdown is None:
+        enable_pattern_pushdown = enable_opt
+    notes: list[str] = []
+    pattern = q.match
+    pattern_vars: set[str] = set()
+    if pattern:
+        pattern_vars = {v.var for v in pattern.vertices} | {e.var for e in pattern.edges}
+
+    # --- split predicates: table-pushable / pattern (Phi) / residual ---
+    table_pushdown: dict[str, list[Predicate]] = {}
+    phi: dict[str, list[Predicate]] = {}
+    residual: list[Predicate] = []
+    for p in q.where:
+        if p.collection in pattern_vars:
+            phi.setdefault(p.collection, []).append(p)   # mechanism 1 (into match)
+        elif p.collection in q.froms:
+            if enable_opt:
+                table_pushdown.setdefault(p.collection, []).append(p)
+            else:
+                residual.append(p)
+        else:
+            residual.append(p)
+
+    # --- mechanism 1b: replicate predicates across models via join equality ---
+    if enable_opt and pattern:
+        for jp in q.joins:
+            lc, rc = jp.left_collection, jp.right_collection
+            tbl_side, var_side = None, None
+            if lc in q.froms and rc in pattern_vars:
+                tbl_side, var_side = jp.left, jp.right
+            elif rc in q.froms and lc in pattern_vars:
+                tbl_side, var_side = jp.right, jp.left
+            if tbl_side is None:
+                continue
+            tcoll, tcol = tbl_side.split(".", 1)
+            vvar, vcol = var_side.split(".", 1)
+            for p in table_pushdown.get(tcoll, []):
+                if p.column == tcol and p.is_equality:
+                    rep = Predicate(f"{vvar}.{vcol}", p.op, p.value, p.value2)
+                    phi.setdefault(vvar, []).append(rep)
+                    notes.append(f"replicated {p} across join {jp} -> {rep}")
+
+    # --- mechanism 3a: match trimming ---
+    match_trim = None
+    if enable_opt and pattern:
+        referenced = _referenced_vars(q, pattern_vars)
+        if not pattern.edges:
+            match_trim = "vertex_scan"
+            notes.append("match-trimming: pattern has no topology constraint")
+        elif (len(pattern.edges) == 1 and len(pattern.vertices) == 2
+              and all(v not in phi for v in (pattern.vertices[0].var, pattern.vertices[1].var))
+              and referenced <= {pattern.edges[0].var}):
+            match_trim = "edge_scan"
+            notes.append("match-trimming: v-e-v with edge-only predicates/projection")
+
+    # --- mechanism 3b: projection trimming ---
+    graph_projection: set[str] = set()
+    if pattern:
+        graph_projection = _referenced_vars(q, pattern_vars)
+        if enable_opt:
+            notes.append(f"projection-trimming keeps {sorted(graph_projection)} of "
+                         f"{sorted(pattern_vars)}")
+        else:
+            graph_projection = set(pattern_vars)
+
+    # --- mechanism 2: cost-based join pushdown (Eq. 8 -> 9/10) ---
+    semi_join_idx: set[int] = set()
+    if enable_opt and pattern and not match_trim:
+        g: Graph = db.graphs[pattern.graph]
+        for i, jp in enumerate(q.joins):
+            side = _graph_join_side(q, pattern_vars, jp)
+            if side is None:
+                continue
+            tbl_attr, var_attr = side
+            tcoll = tbl_attr.split(".", 1)[0]
+            tbl = db.tables[tcoll]
+            n_t = tbl.nrows
+            for p in table_pushdown.get(tcoll, []):
+                n_t = int(n_t * tbl.stats(p.column).selectivity(p))
+            vvar = var_attr.split(".", 1)[0]
+            vlabel = pattern.vertex(vvar).label
+            n_v = g.vertex_tables[vlabel].nrows
+            hops = len(pattern.edges)
+            est_match = n_v * (g.avg_out_degree ** hops)
+            # Plan A (Eq. 8): match on full candidates, then join
+            cost_a = cost_mod.cost_pattern(0, 0, n_v, g.fwd.n_edges, n_v, hops,
+                                           g.avg_out_degree, est_match, 0)
+            cost_a += cost_mod.cost_join(est_match, n_t)
+            # Plan B (Eq. 9/10): semi-join shrinks candidates, then match
+            shrink = min(1.0, n_t / max(n_v, 1))
+            est_match_b = n_v * shrink * (g.avg_out_degree ** hops)
+            cost_b = cost_mod.cost_join(n_v, n_t)
+            cost_b += cost_mod.cost_pattern(0, 0, int(n_v * shrink), g.fwd.n_edges,
+                                            n_v * shrink, hops, g.avg_out_degree,
+                                            est_match_b, 0)
+            if cost_b < cost_a:
+                semi_join_idx.add(i)
+                notes.append(f"join-pushdown join#{i} ({jp}): cost {cost_b:.3g} < {cost_a:.3g}")
+            else:
+                notes.append(f"join kept post-match join#{i} ({jp}): {cost_a:.3g} <= {cost_b:.3g}")
+
+    # --- pattern plan (mechanism 1 + 4 inside) ---
+    pattern_plan = None
+    if pattern and not match_trim:
+        pattern_plan = pattern_mod.plan_pattern(
+            db.graphs[pattern.graph], pattern, phi, graph_projection,
+            enable_pushdown=enable_pattern_pushdown)
+    elif pattern and match_trim:
+        pattern_plan = pattern_mod.PatternPlan(pattern, False, {}, phi, graph_projection)
+
+    return GCDIPlan(q, pattern_plan, table_pushdown, residual, semi_join_idx,
+                    graph_projection, match_trim, notes)
+
+
+def _referenced_vars(q: Query, pattern_vars: set[str]) -> set[str]:
+    """Vars referenced by projection, joins, or residual predicates."""
+    ref = set()
+    for a in q.select:
+        c = a.split(".", 1)[0]
+        if c in pattern_vars:
+            ref.add(c)
+    for jp in q.joins:
+        for side in (jp.left, jp.right):
+            c = side.split(".", 1)[0]
+            if c in pattern_vars:
+                ref.add(c)
+    for p in q.where:
+        if p.collection in pattern_vars:
+            ref.add(p.collection)
+    return ref
+
+
+def _graph_join_side(q: Query, pattern_vars: set[str], jp: JoinPred):
+    if jp.left_collection in q.froms and jp.right_collection in pattern_vars:
+        return jp.left, jp.right
+    if jp.right_collection in q.froms and jp.left_collection in pattern_vars:
+        return jp.right, jp.left
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def execute(db: Database, p: GCDIPlan) -> Table:
+    q = p.query
+    pattern = q.match
+
+    # 1. base tables with pushed selections
+    tables: dict[str, Table] = {}
+    for name in q.froms:
+        t = db.tables[name]
+        for pred in p.table_pushdown.get(name, []):
+            t = t.take(np.nonzero(t.eval_predicate(pred))[0])
+        tables[name] = t
+
+    # 2. graph side
+    graph_rel: Optional[Table] = None
+    consumed_joins: set[int] = set()
+    if pattern:
+        g = db.graphs[pattern.graph]
+        if p.match_trim == "vertex_scan":
+            graph_rel = _trimmed_vertex_scan(g, p)
+        elif p.match_trim == "edge_scan":
+            graph_rel = _trimmed_edge_scan(g, p)
+        else:
+            extra_masks = {}
+            for i in sorted(p.semi_join_idx):
+                jp = q.joins[i]
+                side = _graph_join_side(q, {v.var for v in pattern.vertices}, jp)
+                if side is None:
+                    continue
+                tbl_attr, var_attr = side
+                tcoll, tcol = tbl_attr.split(".", 1)
+                vvar, vcol = var_attr.split(".", 1)
+                label = pattern.vertex(vvar).label
+                mask = join_mod.semi_join_graph(g, label, vcol, tables[tcoll], tcol)
+                extra_masks[vvar] = mask & extra_masks.get(vvar, True)
+                # NOTE: semi-join restricts candidates; the real join still
+                # runs afterwards to attach table attributes (same as the
+                # paper: Eq. 9 keeps the outer join around the match).
+            graph_rel = _match_with_masks(g, p.pattern_plan, extra_masks)
+        graph_rel = _graph_project(g, pattern, graph_rel, p.graph_projection, q)
+
+    # 3. multi-way joins: cluster merging with sort-merge equi-joins.
+    # Each base table / the graph-relation starts as its own cluster; every
+    # join predicate merges (or filters within) a cluster.
+    clusters: list[Table] = []
+    if graph_rel is not None:
+        clusters.append(graph_rel)
+    for name in q.froms:
+        t = tables[name]
+        clusters.append(Table(t.name, {f"{name}.{k}": v for k, v in t.columns.items()}))
+
+    def _find(attr: str) -> int:
+        for ci, c in enumerate(clusters):
+            try:
+                _col_in(c, attr)
+                return ci
+            except KeyError:
+                continue
+        raise KeyError(f"join attr {attr} not found in any cluster")
+
+    for i, jp in enumerate(q.joins):
+        li_c, ri_c = _find(jp.left), _find(jp.right)
+        lc, rc = clusters[li_c], clusters[ri_c]
+        if li_c == ri_c:  # intra-cluster: filter rows where attrs are equal
+            lv = np.asarray(lc.col(_col_in(lc, jp.left)))
+            rv = np.asarray(lc.col(_col_in(lc, jp.right)))
+            clusters[li_c] = lc.take(np.nonzero(lv == rv)[0])
+            continue
+        li, ri = join_mod.equi_join_indices(
+            lc, _col_in(lc, jp.left), rc, _col_in(rc, jp.right))
+        lt, rt = lc.take(li), rc.take(ri)
+        cols = dict(lt.columns)
+        cols.update(rt.columns)
+        merged = Table(f"{lc.name}⋈{rc.name}", cols)
+        clusters[min(li_c, ri_c)] = merged
+        del clusters[max(li_c, ri_c)]
+        consumed_joins.add(i)
+
+    if len(clusters) > 1:
+        # disconnected query: keep the cluster holding the projection attrs
+        needed = list(q.select) + [pr.attr for pr in p.residual]
+        scored = []
+        for c in clusters:
+            hits = sum(1 for a in needed if _has_col(c, a))
+            scored.append((hits, c))
+        scored.sort(key=lambda t: -t[0])
+        if scored[0][0] < len(needed):
+            raise ValueError("query is disconnected: projection attributes "
+                             "span un-joined collections")
+        current = scored[0][1]
+    else:
+        current = clusters[0]
+
+    # 4. residual predicates
+    for pred in p.residual:
+        col = _col_in(current, pred.attr)
+        mask = current.eval_predicate(
+            dataclasses.replace(pred, attr=f"x.{col}"))
+        current = current.take(np.nonzero(mask)[0])
+
+    # 5. final projection
+    cols = {}
+    for a in q.select:
+        cols[a] = current.col(_col_in(current, a))
+    return Table("result", cols)
+
+
+def _col_in(t: Table, attr: str) -> str:
+    if attr in t.columns:
+        return attr
+    # allow "coll.col" when table stores it fully qualified or bare
+    if "." in attr:
+        bare = attr.split(".", 1)[1]
+        if bare in t.columns:
+            return bare
+    raise KeyError(f"{attr} not in {list(t.columns)[:12]}...")
+
+
+def _has_col(t: Table, attr: str) -> bool:
+    try:
+        _col_in(t, attr)
+        return True
+    except KeyError:
+        return False
+
+
+def _match_with_masks(g: Graph, pplan: pattern_mod.PatternPlan, extra: dict) -> Table:
+    """Inject semi-join candidate masks as additional pushed 'in-mask'
+    pseudo-predicates by intersecting them into the pattern's member tables."""
+    if not extra:
+        return pattern_mod.match(g, pplan)
+    # wrap: temporarily extend pushed with mask predicates via closure
+    orig = pattern_mod._candidate_mask
+
+    def patched(g2, pattern, var, preds):
+        m = orig(g2, pattern, var, preds)
+        if var in extra:
+            em = extra[var]
+            m = em.copy() if m is None else (m & em)
+        return m
+
+    pattern_mod._candidate_mask = patched
+    try:
+        return pattern_mod.match(g, pplan)
+    finally:
+        pattern_mod._candidate_mask = orig
+
+
+def _graph_project(g: Graph, pattern: Pattern, rel: Table, keep: set, q: Query) -> Table:
+    """Graph projection π̂_A': fetch referenced record attributes for matched
+    bindings (tid-based RecordAM); unreferenced vars are dropped (projection
+    trimming + traversal pruning: their records were never fetched)."""
+    from . import traversal
+    edge_vars = {e.var for e in pattern.edges}
+    cols: dict[str, np.ndarray] = {}
+    wanted_attrs: dict[str, list[str]] = {}
+    for a in list(q.select) + [jp.left for jp in q.joins] + [jp.right for jp in q.joins]:
+        c = a.split(".", 1)[0]
+        if c in keep and "." in a:
+            wanted_attrs.setdefault(c, []).append(a.split(".", 1)[1])
+    for var in sorted(keep):
+        if var not in rel.columns:
+            continue
+        ids = np.asarray(rel.col(var))
+        cols[f"{var}.__id"] = ids
+        tbl = g.edges if var in edge_vars else g.vertex_tables[pattern.vertex(var).label]
+        for attr in dict.fromkeys(wanted_attrs.get(var, [])):
+            col = tbl.col(attr)
+            cols[f"{var}.{attr}"] = (col.take(ids) if hasattr(col, "take")
+                                     else np.asarray(col)[ids])
+            traversal.COUNTERS.record_fetches += len(ids)
+    return Table(rel.name, cols if cols else dict(rel.columns))
+
+
+def _trimmed_vertex_scan(g: Graph, p: GCDIPlan) -> Table:
+    """Match trimming case 1: no topology constraints -> plain record scan."""
+    pattern = p.query.match
+    var = pattern.vertices[0].var
+    tbl = g.vertex_tables[pattern.vertex(var).label]
+    mask = np.ones(tbl.nrows, dtype=bool)
+    for pred in p.pattern_plan.deferred.get(var, []) if p.pattern_plan else []:
+        mask &= tbl.eval_predicate(pred)
+    vids = np.nonzero(mask)[0]
+    return Table(f"match:{pattern.graph}", {var: vids})
+
+
+def _trimmed_edge_scan(g: Graph, p: GCDIPlan) -> Table:
+    """Match trimming case 2: v-e-v, edge-only predicates -> edge scan."""
+    pattern = p.query.match
+    evar = pattern.edges[0].var
+    mask = np.ones(g.edges.nrows, dtype=bool)
+    for pred in p.pattern_plan.deferred.get(evar, []) if p.pattern_plan else []:
+        mask &= g.edges.eval_predicate(pred)
+    eids = np.nonzero(mask)[0]
+    return Table(f"match:{pattern.graph}", {evar: eids})

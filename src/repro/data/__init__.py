@@ -1,0 +1,2 @@
+"""Synthetic data pipelines: the M2Bench-style multi-model scenario, LM token
+streams, graph samplers, and recsys batch generators."""

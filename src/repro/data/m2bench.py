@@ -1,0 +1,238 @@
+"""Synthetic M2Bench-style multi-model scenario (paper §7, after [30]).
+
+E-commerce scenario with the paper's running example:
+  * relational: Product(id, title, price), Customer(id, person_id, name)
+  * document:   Orders  {order_id, customer_id, product_id, quantity,
+                          shipping: {city, days}, items: [tag ids]}
+  * graphs:     Interested_in  (Persons -> Tags,   weight property)
+                Follows        (Persons -> Persons)
+
+Scale factor SF multiplies entity counts (the paper uses SF 1/2/5/10 over
+M2Bench's 17k-84M records; this container scales the same shape down).
+
+Queries exported mirror the paper's workload aliases:
+  G1-G5: pattern-matching GCDI (Fig. 10/11); G6-G8 shortest-path;
+  A1-A3: GCDA (regression / similarity / multiply).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.schema import (AnalyticsTask, GCDIATask, JoinPred, Pattern,
+                           PatternVertex, Predicate, Query, chain_pattern)
+from ..core.storage import Database, DictColumn, Graph, Table
+
+N_TAGS = 200
+FOOD_TAGS = 40          # tag ids [0, 40) are food-related
+PRODUCT_TITLES = ["Yogurt", "Milk", "Bread", "Coffee", "Tea", "Chocolate",
+                  "Laptop", "Phone", "Book", "Desk"]
+
+
+def generate(sf: int = 1, seed: int = 0) -> Database:
+    rng = np.random.default_rng(seed)
+    n_products = 1_000 * sf
+    n_customers = 2_000 * sf
+    n_orders = 10_000 * sf
+    n_persons = n_customers + 500 * sf         # some persons aren't customers
+    db = Database()
+
+    # --- relational -------------------------------------------------------
+    titles = [PRODUCT_TITLES[i % len(PRODUCT_TITLES)] + (f" v{i // len(PRODUCT_TITLES)}"
+              if i >= len(PRODUCT_TITLES) else "") for i in range(n_products)]
+    db.add_table(Table("Product", {
+        "id": np.arange(n_products, dtype=np.int64),
+        "title": DictColumn(values=titles),
+        "price": rng.uniform(1, 500, n_products).round(2),
+    }))
+    db.add_table(Table("Customer", {
+        "id": np.arange(n_customers, dtype=np.int64),
+        "person_id": rng.permutation(n_persons)[:n_customers].astype(np.int64),
+        "name": DictColumn(values=[f"cust_{i}" for i in range(n_customers)]),
+        "age": rng.integers(18, 80, n_customers).astype(np.int64),
+    }))
+
+    # --- documents ----------------------------------------------------------
+    cust_ids = rng.integers(0, n_customers, n_orders)
+    prod_ids = rng.integers(0, n_products, n_orders)
+    docs = []
+    cities = ["wuhan", "beijing", "shanghai", "shenzhen", "chengdu"]
+    for i in range(n_orders):
+        docs.append({
+            "order_id": int(i),
+            "customer_id": int(cust_ids[i]),
+            "product_id": int(prod_ids[i]),
+            "quantity": int(rng.integers(1, 5)),
+            "shipping": {"city": cities[int(rng.integers(0, len(cities)))],
+                         "days": int(rng.integers(1, 10))},
+            "items": rng.integers(0, N_TAGS, rng.integers(1, 4)).tolist(),
+        })
+    db.add_documents("Orders", docs)
+
+    # --- Interested_in graph (Persons -> Tags) -----------------------------
+    persons = Table("Persons", {
+        "pid": np.arange(n_persons, dtype=np.int64),
+        "country": DictColumn(values=[("cn", "us", "au", "uk")[i % 4]
+                                      for i in range(n_persons)]),
+    })
+    tag_contents = ["food"] * FOOD_TAGS + [f"topic_{i}" for i in range(N_TAGS - FOOD_TAGS)]
+    tags = Table("Tags", {
+        "tid": np.arange(N_TAGS, dtype=np.int64),
+        "content": DictColumn(values=tag_contents),
+        "popularity": rng.uniform(0, 1, N_TAGS),
+    })
+    deg = rng.poisson(8, n_persons).clip(1, 40)
+    src = np.repeat(np.arange(n_persons), deg)
+    dst = rng.integers(0, N_TAGS, len(src))
+    interest_edges = Table("Interested_in_edges", {
+        "svid": src.astype(np.int64),
+        "tvid": dst.astype(np.int64),
+        "weight": rng.uniform(0, 1, len(src)),
+    })
+    db.add_graph(Graph("Interested_in", {"Persons": persons, "Tags": tags},
+                       interest_edges, "Persons", "Tags"))
+
+    # --- Follows graph (Persons -> Persons) --------------------------------
+    fdeg = rng.poisson(5, n_persons).clip(0, 30)
+    fsrc = np.repeat(np.arange(n_persons), fdeg)
+    fdst = rng.integers(0, n_persons, len(fsrc))
+    keep = fsrc != fdst
+    follows_edges = Table("Follows_edges", {
+        "svid": fsrc[keep].astype(np.int64),
+        "tvid": fdst[keep].astype(np.int64),
+        "since": rng.integers(2000, 2026, int(keep.sum())).astype(np.int64),
+    })
+    persons2 = Table("Persons", {k: v for k, v in persons.columns.items()})
+    db.add_graph(Graph("Follows", {"Persons": persons2}, follows_edges,
+                       "Persons", "Persons"))
+    return db
+
+
+# ---------------------------------------------------------------------------
+# Workload: GCDI queries G1-G8 and GCDA tasks A1-A3 (paper aliases)
+# ---------------------------------------------------------------------------
+
+
+def q_g1() -> Query:
+    """G1: single-hop pattern, equality predicate on target vertex +
+    cross-model join with Customer (the paper's Fig. 1(a)/Eq. 2 query)."""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(
+        select=("Customer.id", "t.tid"),
+        froms=("Customer",),
+        match=pat,
+        joins=(JoinPred("Customer.person_id", "p.pid"),),
+        where=(Predicate("t.content", "==", "food"),),
+    )
+
+
+def q_g2() -> Query:
+    """G2: predicate on source side + document join (Orders docs)."""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(
+        select=("Orders.order_id", "t.tid"),
+        froms=("Customer", "Orders"),
+        match=pat,
+        joins=(JoinPred("Customer.person_id", "p.pid"),
+               JoinPred("Orders.customer_id", "Customer.id")),
+        where=(Predicate("p.country", "==", "cn"),
+               Predicate("Orders.shipping.days", "<=", 3)),
+    )
+
+
+def q_g3() -> Query:
+    """G3: two-hop pattern on the homogeneous Follows graph."""
+    pat = chain_pattern("Follows",
+                        ("a", "Persons", "Follows", "b", "Persons"),
+                        ("b", "Persons", "Follows", "c", "Persons"))
+    return Query(
+        select=("a.pid", "c.pid"),
+        froms=(),
+        match=pat,
+        where=(Predicate("a.country", "==", "au"),
+               Predicate("c.country", "==", "uk")),
+    )
+
+
+def q_g4() -> Query:
+    """G4: join-pushdown shape (Eq. 8): Product -> Orders -> Customer ->
+    pattern; selective predicate on Product.title (the yogurt query)."""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(
+        select=("Customer.id", "t.tid"),
+        froms=("Product", "Orders", "Customer"),
+        match=pat,
+        joins=(JoinPred("Product.id", "Orders.product_id"),
+               JoinPred("Orders.customer_id", "Customer.id"),
+               JoinPred("Customer.person_id", "p.pid")),
+        where=(Predicate("Product.title", "==", "Yogurt"),),
+    )
+
+
+def q_g5() -> Query:
+    """G5: range predicate on edge property (match-trimming candidate:
+    v-e-v with edge-only predicates, but projection references vertices)."""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(
+        select=("p.pid", "t.tid"),
+        froms=(),
+        match=pat,
+        where=(Predicate("e0.weight", ">", 0.9),),
+    )
+
+
+def q_edge_scan() -> Query:
+    """Match-trimming case 2 exemplar (paper §6.2 example 2)."""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(select=("e0.weight",), froms=(), match=pat,
+                 where=(Predicate("e0.weight", ">", 0.5),))
+
+
+def q_vertex_scan() -> Query:
+    """Match-trimming case 1 exemplar (paper §6.2 example 1)."""
+    pat = Pattern("Interested_in", (PatternVertex("t", "Tags"),), ())
+    return Query(select=("t.tid",), froms=(), match=pat,
+                 where=(Predicate("t.content", "==", "food"),))
+
+
+def a1_regression() -> GCDIATask:
+    """A1: logistic regression — predict yogurt purchase from interest tags
+    (the paper's running example)."""
+    return GCDIATask(
+        integration=q_g1(),
+        analytics=AnalyticsTask("REGRESSION", [
+            ("random", "Customer.id", "t.tid", N_TAGS),
+        ]),
+    )
+
+
+def a2_similarity() -> GCDIATask:
+    """A2: cosine similarity between customers' tag-interest vectors."""
+    return GCDIATask(
+        integration=q_g1(),
+        analytics=AnalyticsTask("SIMILARITY", [
+            ("random", "Customer.id", "t.tid", N_TAGS),
+        ]),
+    )
+
+
+def a3_multiply() -> GCDIATask:
+    """A3: matrix multiply — customer-tag incidence x tag co-occurrence."""
+    return GCDIATask(
+        integration=q_g1(),
+        analytics=AnalyticsTask("MULTIPLY", [
+            ("random", "Customer.id", "t.tid", N_TAGS),
+        ]),
+    )
+
+
+def purchase_labels(db: Database, product_title: str = "Yogurt") -> np.ndarray:
+    """Ground-truth labels for A1: 1 if the customer ever bought the
+    product (computed across Product ⋈ Orders)."""
+    prod = db.tables["Product"]
+    orders = db.tables["Orders"]
+    title_col = prod.col("title")
+    pid = np.nonzero(title_col.codes == title_col.encode(product_title))[0]
+    bought = np.isin(np.asarray(orders.col("product_id")), pid)
+    labels = np.zeros(db.tables["Customer"].nrows, dtype=np.float32)
+    labels[np.asarray(orders.col("customer_id"))[bought]] = 1.0
+    return labels

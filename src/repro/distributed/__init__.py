@@ -1,0 +1,2 @@
+"""Distribution layer: mesh-aware sharding rules per model family, ZeRO
+optimizer-state sharding, elastic re-mesh, fault-tolerance utilities."""

@@ -1,0 +1,34 @@
+"""Elastic scaling: re-shard live training state onto a different mesh.
+
+Checkpoints are host-complete (CheckpointManager), so growing/shrinking the
+cluster is: drain -> checkpoint -> rebuild mesh -> restore with the new
+shardings. ``reshard_state`` does the same transformation for a live pytree
+(host-gather then device_put), used when the resize happens without going
+through disk."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+Pytree = Any
+
+
+def host_gather(state: Pytree) -> Pytree:
+    """Fully replicate to host numpy (works from any sharding)."""
+    return jax.tree.map(lambda x: np.asarray(x), state)
+
+
+def reshard_state(state: Pytree, new_shardings: Pytree) -> Pytree:
+    host = host_gather(state)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s),
+                        host, new_shardings)
+
+
+def rebalanced_batch_size(global_batch: int, old_dp: int, new_dp: int) -> int:
+    """Keep the global batch divisible by the new DP degree (round down to
+    the nearest multiple; the Trainer rescales LR accordingly)."""
+    per = max(global_batch // new_dp, 1)
+    return per * new_dp

@@ -1,0 +1,172 @@
+"""Sharding rules for every model family on the production mesh.
+
+Mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+  * batch/data dims  -> ('pod','data') (DP; 'pod' composes hierarchically)
+  * TP ('model')     -> attention heads / FFN hidden / MoE experts (EP) /
+                        embedding vocab / recsys table rows
+  * divisibility-checked: a dim is sharded only if divisible by the axis
+    size; otherwise replicated (recorded — the roofline shows the cost, and
+    the §Perf hillclimb addresses the worst case).
+  * ZeRO: optimizer states additionally shard their largest replicated dim
+    over 'data'.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _maybe(dim_size: int, n: int, axis="model"):
+    """Shard a dim over `axis` only when divisible."""
+    return axis if dim_size % n == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# LM transformer
+# ---------------------------------------------------------------------------
+
+
+def lm_param_specs(cfg, mesh: Mesh) -> Pytree:
+    from ..models.transformer import TransformerConfig  # noqa: F401
+    tp = axis_size(mesh, "model")
+    d, h, kv, dh, f, v = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, cfg.d_ff, cfg.vocab)
+    E = cfg.n_experts
+    h_ax = _maybe(h, tp)              # shard attention heads?
+    kv_ax = _maybe(kv, tp)
+    f_ax = _maybe(f, tp)
+    v_ax = _maybe(v, tp)
+    e_ax = _maybe(E, tp) if cfg.is_moe else None
+
+    layers = {
+        "wq": P(None, None, h_ax),
+        "wk": P(None, None, kv_ax),
+        "wv": P(None, None, kv_ax),
+        "wo": P(None, h_ax, None),
+        "ln1": P(), "ln2": P(),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = P(None, h_ax)
+        layers["bk"] = P(None, kv_ax)
+        layers["bv"] = P(None, kv_ax)
+    if cfg.norm == "layernorm":
+        layers["ln1_b"] = P()
+        layers["ln2_b"] = P()
+    if cfg.is_moe:
+        layers["router"] = P()
+        layers["w_in"] = P(None, e_ax, None, None if e_ax else f_ax)
+        layers["w_out"] = P(None, e_ax, None if e_ax else f_ax, None)
+        if cfg.mlp == "swiglu":
+            layers["w_gate"] = P(None, e_ax, None, None if e_ax else f_ax)
+    else:
+        layers["w_in"] = P(None, None, f_ax)
+        layers["w_out"] = P(None, f_ax, None)
+        if cfg.mlp == "swiglu":
+            layers["w_gate"] = P(None, None, f_ax)
+
+    specs = {
+        "embed": P(v_ax, None) if v_ax else P(None, _maybe(d, tp)),
+        "ln_f": P(),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = P(None, v_ax) if v_ax else P(_maybe(d, tp), None)
+    return specs
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh), None)
+
+
+def lm_cache_specs(cfg, mesh: Mesh, seq_shard: bool = False) -> Pytree:
+    if seq_shard:  # D2 perf variant: KV seq dim sharded over 'model'
+        spec = P(None, dp_axes(mesh), None, "model", None)
+    else:
+        kv_ax = _maybe(cfg.n_kv_heads, axis_size(mesh, "model"))
+        spec = P(None, dp_axes(mesh), kv_ax, None, None)  # (L, B, Hk, M, dh)
+    return {"k": spec, "v": spec}
+
+
+# ---------------------------------------------------------------------------
+# GNN: edge-parallel message passing
+# ---------------------------------------------------------------------------
+
+
+def gnn_data_specs(mesh: Mesh, replicate_nodes: bool = True) -> dict:
+    dp = dp_axes(mesh)
+    return {
+        "edges": P(dp, None),                 # (E, 2) edge index, edge-parallel
+        "nodes": P() if replicate_nodes else P(dp, None),
+        "batch_nodes": P(dp, None),           # batched small graphs
+    }
+
+
+# ---------------------------------------------------------------------------
+# RecSys: DLRM-style table-row sharding
+# ---------------------------------------------------------------------------
+
+
+def recsys_param_specs(params: Pytree, mesh: Mesh) -> Pytree:
+    """Embedding tables row(vocab)-sharded over 'model'; dense replicated."""
+    tp = axis_size(mesh, "model")
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "tables" in name and leaf.ndim == 2:
+            return P(_maybe(leaf.shape[0], tp), None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+
+def zero_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Add 'data' sharding on the largest unsharded, divisible dim."""
+    n = axis_size(mesh, "data")
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = -1, 0
+    for i, (s, dim) in enumerate(zip(entries, shape)):
+        if s is None and dim % n == 0 and dim > best_size:
+            best, best_size = i, dim
+    if best >= 0:
+        entries[best] = "data"
+    return P(*entries)
+
+
+def opt_state_specs(param_specs: Pytree, params_shape: Pytree, mesh: Mesh,
+                    zero: bool = True) -> Pytree:
+    def one(spec, shaped):
+        if not zero:
+            return spec
+        return zero_spec(spec, shaped.shape, mesh)
+
+    m = jax.tree.map(one, param_specs, params_shape)
+    return {"m": m, "v": jax.tree.map(lambda s: s, m), "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def tree_shardings(specs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))

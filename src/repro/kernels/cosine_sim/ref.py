@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for cosine similarity."""
+import jax.numpy as jnp
+
+
+def cosine_sim_ref(x, y, eps: float = 1e-12):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    xn = x / jnp.sqrt(jnp.sum(x * x, -1, keepdims=True) + eps)
+    yn = y / jnp.sqrt(jnp.sum(y * y, -1, keepdims=True) + eps)
+    return jnp.dot(xn, yn.T)

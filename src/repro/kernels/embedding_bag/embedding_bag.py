@@ -1,0 +1,62 @@
+"""EmbeddingBag Pallas kernel — the recsys hot path (JAX has no native
+EmbeddingBag; this IS part of the system).
+
+out[i] = sum_j weights[i, j] * table[indices[i, j]]
+
+TPU adaptation: the indices are *scalar-prefetched* (SMEM) so the BlockSpec
+index map of the embedding table can select the (1, D) row block for grid
+step (i, j) — the gather is expressed as data-dependent block indexing, which
+the Pallas pipeline turns into an HBM->VMEM DMA per row. Padded slots use
+index -1 -> clamped to row 0 with weight 0 (exact).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_ref, w_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += w_ref[0, 0] * table_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None, *,
+                  interpret: bool = False) -> jax.Array:
+    """table: (V, D); indices: (n_bags, bag) int32, -1 = padding;
+    weights: (n_bags, bag) or None (=1.0 for valid slots)."""
+    n_bags, bag = indices.shape
+    V, D = table.shape
+    valid = (indices >= 0)
+    if weights is None:
+        weights = valid.astype(jnp.float32)
+    else:
+        weights = weights * valid
+    idx = jnp.maximum(indices, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_bags, bag),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, j, idx_ref: (idx_ref[i, j], 0)),
+            pl.BlockSpec((1, 1), lambda i, j, idx_ref: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda i, j, idx_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, D), jnp.float32),
+        interpret=interpret,
+    )(idx, table, weights)
+    return out

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: gather + masked weighted sum (the segment_sum form)."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, weights=None):
+    valid = (indices >= 0)
+    if weights is None:
+        weights = valid.astype(jnp.float32)
+    else:
+        weights = weights * valid
+    rows = jnp.take(table, jnp.maximum(indices, 0), axis=0)  # (n_bags, bag, D)
+    return jnp.sum(rows.astype(jnp.float32) * weights[..., None], axis=1)

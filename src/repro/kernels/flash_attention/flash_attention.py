@@ -1,0 +1,115 @@
+"""Flash attention Pallas kernel (GQA, causal, KV-length masked).
+
+Online-softmax tiling: grid (batch, q_heads, sq/bq, skv/bk); the KV axis is
+the sequential dimension, with running max / normalizer / output accumulator
+held in VMEM scratch. GQA is expressed in the BlockSpec index map — the KV
+block for query head ``h`` is head ``h // group`` — so grouped heads re-read
+the same KV tile from HBM only once per (i, j) step instead of materializing
+repeated KV.
+
+Query positions are assumed to be the *last* ``sq`` positions of a context of
+``length`` tokens (length passed per batch row), which covers training
+(length == sq), prefill, and single-token decode (sq == 1) with one kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, bq: int, bk: int, sq: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)                    # (bk, dh)
+    length = len_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < length
+    if causal:
+        qpos = (length - sq) + i * bq + \
+            jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        mask &= qpos >= kpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                              # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)                         # (bq, 1)
+    l_new = alpha * l_ref[...][:, :1] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _done():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    lengths: jax.Array | None = None, *, causal: bool = True,
+                    bq: int = 128, bk: int = 128, interpret: bool = False
+                    ) -> jax.Array:
+    """q: (b, h, sq, dh); k/v: (b, hk, skv, dh); lengths: (b,) valid KV
+    prefix length (defaults to skv). Queries occupy positions
+    [length - sq, length)."""
+    b, h, sq, dh = q.shape
+    _, hk, skv, _ = k.shape
+    assert h % hk == 0
+    group = h // hk
+    scale = dh ** -0.5
+    if lengths is None:
+        lengths = jnp.full((b,), skv, jnp.int32)
+    len2d = lengths.astype(jnp.int32).reshape(b, 1)
+
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    qpad, kpad = (-sq) % bq_, (-skv) % bk_
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    SQ, SK = sq + qpad, skv + kpad
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               bq=bq_, bk=bk_, sq=sq)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, SQ // bq_, SK // bk_),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, dh), lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, bk_, dh), lambda bb, hh, i, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1, 1, bk_, dh), lambda bb, hh, i, j: (bb, hh // group, j, 0)),
+            pl.BlockSpec((1, 1), lambda bb, hh, i, j: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, dh), lambda bb, hh, i, j: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, SQ, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, dh), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+            pltpu.VMEM((bq_, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, len2d)
+    return out[:, :, :sq, :]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: masked multi-head attention with GQA."""
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, lengths=None, *, causal: bool = True):
+    b, h, sq, dh = q.shape
+    _, hk, skv, _ = k.shape
+    group = h // hk
+    if lengths is None:
+        lengths = jnp.full((b,), skv, jnp.int32)
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * dh ** -0.5
+    kpos = jnp.arange(skv)[None, None, None, :]
+    mask = kpos < lengths[:, None, None, None]
+    if causal:
+        qpos = (lengths[:, None, None, None] - sq) + jnp.arange(sq)[None, None, :, None]
+        mask = mask & (qpos >= kpos)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.nan_to_num(jnp.exp(s - jnp.max(s, -1, keepdims=True)))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

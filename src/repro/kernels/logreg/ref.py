@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused logistic-regression gradient."""
+import jax
+import jax.numpy as jnp
+
+
+def logreg_grad_ref(x, y, w):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    z = x @ w
+    p = jax.nn.sigmoid(z)
+    grad = x.T @ (p - y) / x.shape[0]
+    loss = jnp.mean(jax.nn.softplus(z) - y * z)
+    return grad, loss

@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32)).astype(x.dtype)

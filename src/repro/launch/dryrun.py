@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (dry-run only: 512 placeholder host devices so jax.make_mesh can build the
+#  production mesh; smoke tests and benches must NOT import this module.)
+if os.environ.get("DRYRUN_DEVICE_COUNT"):  # local-test override, pre-jax-init
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["DRYRUN_DEVICE_COUNT"])
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., donate...).lower(*specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes
+and record the result as JSON under experiments/dryrun/.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             mesh_override=None, perf_variant: str = "") -> dict:
+    import jax
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.launch.hlo_analysis import collective_bytes, hlo_cost
+
+    t0 = time.time()
+    mesh = mesh_override if mesh_override is not None else \
+        make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "multi_pod": multi_pod, "perf_variant": perf_variant}
+    try:
+        with mesh:
+            cell = build_cell(arch, shape_name, mesh)
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate_argnums)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+            corrected = hlo_cost(hlo)  # trip-count-aware (XLA counts while
+            #                            bodies once — verified empirically)
+
+            rec.update({
+                "ok": True,
+                "kind": cell.kind,
+                "meta": cell.meta,
+                "lower_s": round(t_lower - t0, 2),
+                "compile_s": round(t_compile - t_lower, 2),
+                "flops_per_device": float(cost.get("flops", 0.0)),
+                "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+                "dot_flops_per_device": corrected["flops"],
+                "hbm_bytes_per_device": corrected["bytes"],
+                "collectives": coll,
+                "memory": {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                    "generated_code_bytes": getattr(
+                        mem, "generated_code_size_in_bytes", 0),
+                },
+                "n_devices": mesh.devices.size,
+            })
+            print(f"[dryrun] {arch}/{shape_name}/{mesh_name}"
+                  f"{'/' + perf_variant if perf_variant else ''}: OK "
+                  f"compile={rec['compile_s']}s "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"bytes/dev={rec['bytes_per_device']:.3e} "
+                  f"coll={coll['total_bytes']:.3e}B")
+            print(f"  memory: args={rec['memory']['argument_bytes']/1e9:.2f}GB "
+                  f"out={rec['memory']['output_bytes']/1e9:.2f}GB "
+                  f"temp={rec['memory']['temp_bytes']/1e9:.2f}GB")
+    except Exception as e:  # noqa: BLE001 — record failures, they are bugs
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+        print(f"[dryrun] {arch}/{shape_name}/{mesh_name}: FAIL {e}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{perf_variant}" if perf_variant else ""
+        path = os.path.join(out_dir,
+                            f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        slim = {k: v for k, v in rec.items() if k != "traceback"}
+        with open(path, "w") as f:
+            json.dump(slim, f, indent=1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--perf-variant", default="",
+                    help="tag an optimized variant (env flags set by caller)")
+    args = ap.parse_args()
+
+    from repro import configs
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a, s, _ in configs.all_cells()]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch.replace("-", "_").replace(".", "_"), args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out,
+                           perf_variant=args.perf_variant)
+            failures += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done: {len(cells) * len(meshes) - failures} ok, "
+          f"{failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

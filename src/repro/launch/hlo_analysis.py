@@ -1,0 +1,335 @@
+"""Post-compile HLO analysis: collective-bytes accounting for §Roofline.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+optimized HLO text, sum the result byte-sizes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute),
+and — crucially — multiply collectives that live inside ``while`` bodies
+(scan over layers / chunks) by the loop trip count, recursively for nested
+scans. All-reduce bytes are doubled per the ring-cost model.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_SHAPE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_ELEM_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+    r"|while\(.*?\).*?body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:call|to_apply)=?\(?%?([\w\.\-]+)")
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """Computation name -> body lines. Header lines are unindented and end
+    with '{'; bodies are indented; '}' alone closes a computation."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if not line.startswith(" ") and line.rstrip().endswith("{"):
+                m = _COMP_START.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        comps[cur].append(line.strip())
+    return comps
+
+
+def _line_collective_bytes(line: str):
+    """(kind, bytes) or None for one HLO line."""
+    if "-done(" in line:
+        return None
+    m = _SHAPE_RE.search(line)
+    if m:
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype in _DTYPE_BYTES:
+            return kind, _numel(dims) * _DTYPE_BYTES[dtype]
+        return None
+    mt = _TUPLE_RE.search(line)
+    if mt:
+        kind = mt.group(2)
+        size = 0
+        for dtype, dims in _ELEM_RE.findall(mt.group(1)):
+            if dtype in _DTYPE_BYTES:
+                size += _numel(dims) * _DTYPE_BYTES[dtype]
+        return kind, size
+    return None
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """{kind: {count, bytes}, 'total_bytes': b} with while-body multiplicity."""
+    comps = _split_computations(hlo_text)
+
+    # trip counts: for each condition computation, the largest scalar constant
+    cond_trip: dict[str, int] = {}
+    for name, lines in comps.items():
+        consts = [int(c) for line in lines for c in _CONST_RE.findall(line)]
+        if consts:
+            cond_trip[name] = max(consts)
+
+    memo: dict[str, dict] = {}
+
+    def walk(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return {}
+        acc: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+        for line in comps[name]:
+            lc = _line_collective_bytes(line)
+            if lc:
+                kind, size = lc
+                factor = 2 if kind == "all-reduce" else 1
+                acc[kind]["count"] += 1
+                acc[kind]["bytes"] += size * factor
+            if re.search(r"\bwhile\(", line):
+                wm = re.search(r"condition=%?([\w\.\-]+)", line)
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                if wm and bm:
+                    tm = _TRIP_RE.search(line)
+                    if tm:
+                        trips = int(tm.group(1))
+                    else:
+                        trips = cond_trip.get(wm.group(1), 1)
+                    child = walk(bm.group(1), stack + (name,))
+                    for kind, v in child.items():
+                        if kind == "total_bytes":
+                            continue
+                        acc[kind]["count"] += v["count"] * trips
+                        acc[kind]["bytes"] += v["bytes"] * trips
+            elif "conditional(" in line or re.search(r"\bcall\(", line):
+                for cm in re.finditer(
+                        r"(?:true_computation|false_computation|to_apply|"
+                        r"branch_computations=\{)%?([\w\.\-]+)", line):
+                    child = walk(cm.group(1), stack + (name,))
+                    for kind, v in child.items():
+                        if kind == "total_bytes":
+                            continue
+                        acc[kind]["count"] += v["count"]
+                        acc[kind]["bytes"] += v["bytes"]
+        memo[name] = {k: dict(v) for k, v in acc.items()}
+        return memo[name]
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    result = walk(entry) if entry else {}
+    # fall back to flat count if entry parsing failed
+    if not result:
+        acc = defaultdict(lambda: {"count": 0, "bytes": 0})
+        for line in hlo_text.splitlines():
+            lc = _line_collective_bytes(line)
+            if lc:
+                kind, size = lc
+                factor = 2 if kind == "all-reduce" else 1
+                acc[kind]["count"] += 1
+                acc[kind]["bytes"] += size * factor
+        result = {k: dict(v) for k, v in acc.items()}
+    result["total_bytes"] = sum(
+        v["bytes"] for k, v in result.items() if k != "total_bytes")
+    return result
+
+
+def flops_and_bytes(cost: dict) -> tuple[float, float]:
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", 0.0))
+    return flops, byt
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware flops/bytes (XLA's cost_analysis counts while bodies ONCE
+# — verified empirically: scan of 10 matmuls reports 1 matmul of flops).
+# We walk entry -> while/call bodies multiplying by known_trip_count.
+#   flops: dot ops (2 * numel(out) * contracted size) — the MXU term.
+#   bytes: per top-level op: operand + output buffer bytes (fusion = its
+#   boundary buffers only, internals live in registers/VMEM — the right
+#   model for an HBM roofline). get-tuple-element/bitcast/tuple/parameter/
+#   constant are free.
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[a-z0-9]+"
+    r"\[[0-9,]*\]))[^\s]*\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\])")
+_FREE_OPS = {"get-tuple-element", "tuple", "bitcast", "parameter", "constant",
+             "iota", "after-all", "partition-id", "replica-id", "while",
+             "conditional", "call", "custom-call",
+             # dtype converts fuse into their consumers on TPU; the CPU
+             # backend materializes bf16->f32 copies that a TPU never would
+             "convert"}
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _type_bytes(t: str) -> int:
+    """bytes of 'f32[2,3]' or '(f32[2], s32[])'."""
+    total = 0
+    for dtype, dims in _ELEM_RE.findall(t):
+        if dtype in _DTYPE_BYTES:
+            total += _numel(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape(t: str):
+    m = _ELEM_RE.search(t)
+    if not m:
+        return None, []
+    dtype, dims = m.group(1), m.group(2)
+    return dtype, [int(d) for d in dims.split(",")] if dims else []
+
+
+def hlo_cost(hlo_text: str) -> dict:
+    """{'flops': f, 'bytes': b} with while-trip multiplication."""
+    raw_comps: dict[str, list[str]] = {}
+    headers: dict[str, str] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            if not line.startswith(" ") and line.rstrip().endswith("{"):
+                m = _COMP_START.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    raw_comps[cur] = []
+                    headers[cur] = line
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        raw_comps[cur].append(line.strip())
+
+    # computations called as fusions / reducers are NOT walked for bytes
+    fusion_bodies = set()
+    for lines in raw_comps.values():
+        for line in lines:
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", line):
+                fusion_bodies.add(m.group(1))
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            entry = m.group(1) if m else None
+            break
+
+    memo: dict[str, tuple[float, float]] = {}
+
+    def walk(name: str, stack=()) -> tuple[float, float]:
+        if name in memo:
+            return memo[name]
+        if name not in raw_comps or name in stack:
+            return (0.0, 0.0)
+        shapes: dict[str, str] = {}
+        for pm in _PARAM_RE.finditer(headers.get(name, "")):
+            shapes[pm.group(1)] = pm.group(2)
+        flops = 0.0
+        byt = 0.0
+        for line in raw_comps[name]:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            out_name, out_type, opcode = dm.groups()
+            shapes[out_name] = out_type
+            if opcode == "fusion":
+                # walk nested flops (dots inside fusions still run on MXU)
+                fm = re.search(r"calls=%?([\w\.\-]+)", line)
+                if fm:
+                    f_in, _ = walk(fm.group(1), stack + (name,))
+                    flops += f_in
+            if opcode == "while":
+                wm = re.search(r"body=%?([\w\.\-]+)", line)
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                if wm:
+                    f_in, b_in = walk(wm.group(1), stack + (name,))
+                    flops += f_in * trips
+                    byt += b_in * trips
+                continue
+            if opcode in ("call", "conditional"):
+                for cm in re.finditer(
+                        r"(?:to_apply|true_computation|false_computation)"
+                        r"=%?([\w\.\-]+)", line):
+                    f_in, b_in = walk(cm.group(1), stack + (name,))
+                    flops += f_in
+                    byt += b_in
+                continue
+            if opcode == "dot":
+                ops = re.findall(r"\(([^)]*)\)", line)
+                operands = [o.strip().lstrip("%") for o in
+                            (ops[0].split(",") if ops else [])]
+                cm = _CONTRACT_RE.search(line)
+                contract = 1
+                if cm and operands:
+                    lhs_t = shapes.get(operands[0])
+                    if lhs_t:
+                        _, dims = _first_shape(lhs_t)
+                        for ci in (cm.group(1).split(",") if cm.group(1) else []):
+                            i = int(ci)
+                            if i < len(dims):
+                                contract *= dims[i]
+                _, out_dims = _first_shape(out_type)
+                out_numel = 1
+                for d in out_dims:
+                    out_numel *= d
+                flops += 2.0 * out_numel * contract
+            if name in fusion_bodies:
+                continue  # fusion internals don't touch HBM
+            if opcode in _FREE_OPS:
+                continue
+            ops = re.findall(r"\(([^)]*)\)", line)
+            operand_names = [o.strip().lstrip("%") for o in
+                             (ops[0].split(",") if ops else []) if o.strip()]
+            if opcode in ("dynamic-slice", "gather", "slice"):
+                byt += 2 * _type_bytes(out_type)   # read slice + write
+            elif opcode == "dynamic-update-slice" and len(operand_names) > 1:
+                upd = shapes.get(operand_names[1])
+                byt += 2 * (_type_bytes(upd) if upd else _type_bytes(out_type))
+            elif opcode == "scatter" and len(operand_names) > 2:
+                upd = shapes.get(operand_names[2])
+                byt += 2 * (_type_bytes(upd) if upd else 0) + _type_bytes(out_type)
+            else:
+                b = _type_bytes(out_type)
+                for o in operand_names:
+                    if o in shapes:
+                        b += _type_bytes(shapes[o])
+                byt += b
+        memo[name] = (flops, byt)
+        return memo[name]
+
+    f, b = walk(entry) if entry else (0.0, 0.0)
+    return {"flops": f, "bytes": b}

@@ -1,0 +1,241 @@
+"""Per-cell step builders + ShapeDtypeStruct input specs for the dry-run.
+
+``build_cell(arch, shape_name, mesh)`` returns a ``Cell`` with:
+  * ``fn``            — the step function to lower (train_step / prefill_step
+                         / serve_step / gnn_train_step / recsys steps)
+  * ``in_shardings``  — pytree of NamedSharding matching ``args``
+  * ``args``          — pytree of jax.ShapeDtypeStruct (weak-type-correct,
+                         shardable, never allocated)
+  * ``meta``          — flops/bytes accounting inputs for §Roofline
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import configs as configs_pkg
+from ..distributed import sharding as shr
+from ..train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    donate_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _sds(tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_cell(arch: str, shape_name: str, spec: dict, mesh: Mesh) -> Cell:
+    from ..models import transformer as tfm
+
+    mod = configs_pkg.get(arch)
+    cfg = mod.config()
+    B, S = spec["batch"], spec["seq"]
+    dp = shr.dp_axes(mesh)
+    import os
+    dp_total = int(np.prod([shr.axis_size(mesh, a) for a in dp]))
+    if cfg.is_moe:
+        # dispatch groups == DP shards: top-k sort + capacity are shard-local
+        cfg = dataclasses.replace(cfg, moe_groups=min(dp_total, B))
+        if os.environ.get("REPRO_MOE_EP") == "1":  # §Perf M1 variant
+            cfg = dataclasses.replace(cfg, mesh=mesh, mesh_dp=tuple(dp),
+                                      moe_ep_axis="model")
+        if os.environ.get("REPRO_MOE_SHARDMAP") == "1":  # §Perf M2 variant
+            cfg = dataclasses.replace(cfg, mesh=mesh, mesh_dp=tuple(dp),
+                                      moe_ep_axis="model",
+                                      moe_impl="shard_map")
+
+    params_shape = jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = shr.lm_param_specs(cfg, mesh)
+    pshard = shr.tree_shardings(pspecs, mesh)
+    batch_sh = NamedSharding(mesh, P(dp, None))
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+
+    if spec["kind"] == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        ospecs = shr.opt_state_specs(pspecs, params_shape, mesh)
+        oshard = shr.tree_shardings(ospecs, mesh)
+        opt_cfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            (loss, nll), grads = jax.value_and_grad(
+                tfm.loss_fn, has_aux=True)(params, batch, cfg)
+            params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, {"loss": loss, "nll": nll}
+
+        args = (params_shape, opt_shape,
+                {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)})
+        in_sh = (pshard, oshard, {"tokens": batch_sh, "labels": batch_sh})
+        return Cell(arch, shape_name, "train", train_step, args, in_sh,
+                    donate_argnums=(0, 1),
+                    meta={"tokens": B * S, "n_params": n_params,
+                          "n_active": n_active, "fwd_bwd": True})
+
+    import os
+    kv_seq_shard = (os.environ.get("REPRO_KV_SEQ_SHARD") == "1"
+                    and spec["kind"] == "decode")
+    if kv_seq_shard:
+        cfg = dataclasses.replace(cfg, mesh=mesh, mesh_dp=tuple(dp),
+                                  kv_seq_shard="model")
+    cache_shape = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, S))
+    cspecs = shr.lm_cache_specs(cfg, mesh, seq_shard=kv_seq_shard)
+    cshard = shr.tree_shardings(cspecs, mesh)
+    len_sh = NamedSharding(mesh, P(dp))
+
+    if spec["kind"] == "prefill":
+        def prefill_step(params, cache, tokens):
+            logits, new_cache = tfm.forward(
+                params, tokens, cfg, cache=cache,
+                cache_lengths=jnp.zeros((tokens.shape[0],), jnp.int32))
+            return logits[:, -1], new_cache
+
+        args = (params_shape, cache_shape,
+                jax.ShapeDtypeStruct((B, S), jnp.int32))
+        in_sh = (pshard, cshard, batch_sh)
+        return Cell(arch, shape_name, "prefill", prefill_step, args, in_sh,
+                    donate_argnums=(1,),
+                    meta={"tokens": B * S, "n_params": n_params,
+                          "n_active": n_active, "fwd_bwd": False})
+
+    if spec["kind"] == "decode":
+        def decode_step(params, cache, tokens, lengths):
+            return tfm.serve_step(params, cache, tokens, lengths, cfg)
+
+        args = (params_shape, cache_shape,
+                jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32))
+        in_sh = (pshard, cshard, batch_sh, len_sh)
+        return Cell(arch, shape_name, "decode", decode_step, args, in_sh,
+                    donate_argnums=(1,),
+                    meta={"tokens": B, "n_params": n_params,
+                          "n_active": n_active, "fwd_bwd": False,
+                          "kv_bytes": int(np.prod(
+                              cache_shape["k"].shape)) * 2 * 2})
+
+    raise ValueError(spec["kind"])
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _gnn_cell(arch: str, shape_name: str, spec: dict, mesh: Mesh) -> Cell:
+    from ..models.gnn import build as gnn_build
+    return gnn_build.build_cell(arch, shape_name, spec, mesh, Cell)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_cell(arch: str, shape_name: str, spec: dict, mesh: Mesh) -> Cell:
+    from ..models import recsys as rs
+    return rs.build_cell(arch, shape_name, spec, mesh, Cell)
+
+
+def _db_cell(arch: str, shape_name: str, spec: dict, mesh: Mesh) -> Cell:
+    """The paper's GCDA operators (§5.4) at production scale — bonus cells
+    proving the engine's analytical layer itself shards onto the meshes."""
+    from jax.experimental.shard_map import shard_map
+    dp = shr.dp_axes(mesh)
+    f32 = jnp.float32
+    kind = spec["kind"]
+
+    if kind == "gcda_regression":
+        n, d = spec["rows"], spec["features"]
+
+        def step(X, y, w):
+            def local(Xl, yl, wl):
+                z = Xl @ wl
+                p = jax.nn.sigmoid(z)
+                g = jax.lax.psum(Xl.T @ (p - yl), dp) / n
+                loss = jax.lax.psum(
+                    jnp.sum(jax.nn.softplus(z) - yl * z), dp) / n
+                return wl - 0.5 * g, loss
+
+            return shard_map(local, mesh=mesh,
+                             in_specs=(P(dp, None), P(dp), P()),
+                             out_specs=(P(), P()))(X, y, w)
+
+        args = (jax.ShapeDtypeStruct((n, d), f32),
+                jax.ShapeDtypeStruct((n,), f32),
+                jax.ShapeDtypeStruct((d,), f32))
+        in_sh = (NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
+                 NamedSharding(mesh, P()))
+        meta = {"rows": n, "features": d, "fwd_bwd": True}
+        return Cell(arch, shape_name, "gcda_regression", step, args, in_sh,
+                    meta=meta)
+
+    if kind == "gcda_similarity":
+        n, d = spec["rows"], spec["features"]
+
+        def sim(X, Y):
+            from ..kernels.cosine_sim.ref import cosine_sim_ref
+            return cosine_sim_ref(X, Y).astype(jnp.bfloat16)
+
+        args = (jax.ShapeDtypeStruct((n, d), f32),
+                jax.ShapeDtypeStruct((n, d), f32))
+        in_sh = (NamedSharding(mesh, P(dp, None)),
+                 NamedSharding(mesh, P("model", None)))
+        return Cell(arch, shape_name, "gcda_similarity", sim, args, in_sh,
+                    meta={"rows": n, "features": d, "fwd_bwd": False})
+
+    if kind == "gcda_multiply":
+        m, k, n = spec["m"], spec["k"], spec["n"]
+
+        def mul(X, Y):
+            return (X @ Y).astype(jnp.bfloat16)
+
+        args = (jax.ShapeDtypeStruct((m, k), f32),
+                jax.ShapeDtypeStruct((k, n), f32))
+        in_sh = (NamedSharding(mesh, P(dp, None)),
+                 NamedSharding(mesh, P(None, "model")))
+        return Cell(arch, shape_name, "gcda_multiply", mul, args, in_sh,
+                    meta={"m": m, "k": k, "n": n, "fwd_bwd": False})
+
+    raise ValueError(kind)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    mod = configs_pkg.get(arch)
+    spec = mod.SHAPES[shape_name]
+    if spec.get("skip"):
+        raise ValueError(f"cell {arch}/{shape_name} is skipped: {spec['skip']}")
+    if mod.FAMILY == "lm":
+        return _lm_cell(arch, shape_name, spec, mesh)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(arch, shape_name, spec, mesh)
+    if mod.FAMILY == "recsys":
+        return _recsys_cell(arch, shape_name, spec, mesh)
+    if mod.FAMILY == "db":
+        return _db_cell(arch, shape_name, spec, mesh)
+    raise ValueError(mod.FAMILY)

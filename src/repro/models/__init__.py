@@ -1,0 +1,2 @@
+"""Assigned architecture pool: LM transformers (dense + MoE), GNNs
+(including equivariant), and recsys wide-deep."""

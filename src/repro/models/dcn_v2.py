@@ -1,0 +1,82 @@
+"""DCN-v2 [arXiv:2008.13535] — extra (non-assigned) pool architecture:
+explicit low-rank cross network + deep tower over sparse embeddings.
+
+    x_{l+1} = x_0 * (U_l (V_l^T x_l) + b_l) + x_l
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNv2Config:
+    name: str = "dcn-v2"
+    n_sparse: int = 26
+    n_dense: int = 13
+    embed_dim: int = 16
+    vocab_per_field: int = 100_000
+    n_cross: int = 3
+    cross_rank: int = 64
+    mlp: tuple = (256, 128)
+
+
+def init_params(rng, cfg: DCNv2Config):
+    k = jax.random.split(rng, 6 + cfg.n_cross)
+    d0 = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    cross = []
+    for i in range(cfg.n_cross):
+        cross.append({
+            "U": jax.random.normal(k[i], (d0, cfg.cross_rank)) * d0 ** -0.5,
+            "V": jax.random.normal(jax.random.fold_in(k[i], 1),
+                                   (d0, cfg.cross_rank)) * d0 ** -0.5,
+            "b": jnp.zeros((d0,)),
+        })
+    dims = (d0,) + tuple(cfg.mlp)
+    mlp = [{"w": jax.random.normal(jax.random.fold_in(k[-2], i),
+                                   (a, b)) * a ** -0.5,
+            "b": jnp.zeros((b,))}
+           for i, (a, b) in enumerate(zip(dims[:-1], dims[1:]))]
+    return {
+        "tables": jax.random.normal(
+            k[-3], (cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim)) * 0.01,
+        "cross": cross,
+        "mlp": mlp,
+        "head": jax.random.normal(k[-1], (cfg.mlp[-1] + d0, 1)) * 0.05,
+    }
+
+
+def forward(params, dense, sparse_idx, cfg: DCNv2Config):
+    B = sparse_idx.shape[0]
+    emb = jnp.einsum("fbd->bfd", jax.vmap(
+        lambda t, i: jnp.take(t, i, axis=0),
+        in_axes=(0, 1))(params["tables"], sparse_idx))
+    x0 = jnp.concatenate([emb.reshape(B, -1), dense], -1)
+    x = x0
+    for cp in params["cross"]:
+        x = x0 * ((x @ cp["V"]) @ cp["U"].T + cp["b"]) + x
+    h = x0
+    for lyr in params["mlp"]:
+        h = jax.nn.relu(h @ lyr["w"] + lyr["b"])
+    return (jnp.concatenate([x, h], -1) @ params["head"])[:, 0]
+
+
+def loss_fn(params, batch, cfg: DCNv2Config):
+    logits = forward(params, batch["dense"], batch["sparse"], cfg)
+    y = batch["labels"]
+    return jnp.mean(jax.nn.softplus(logits) - y * logits)
+
+
+def random_batch(cfg: DCNv2Config, batch: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {
+        "dense": jnp.asarray(rng.standard_normal((batch, cfg.n_dense)),
+                             jnp.float32),
+        "sparse": jnp.asarray(
+            rng.integers(0, cfg.vocab_per_field, (batch, cfg.n_sparse)),
+            jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, 2, batch), jnp.float32),
+    }

@@ -1,0 +1,2 @@
+"""GNN architectures: gatedgcn, pna (SpMM/segment regime) and mace,
+equiformer_v2 (irrep tensor-product regime, eSCN-adapted)."""

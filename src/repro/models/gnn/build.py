@@ -1,0 +1,150 @@
+"""GNN dry-run cell builder: (arch x shape) -> train step + ShapeDtypeStruct
+inputs + shardings.
+
+Sharding scheme (baseline):
+  * edge arrays (src/dst/masks) — 'data'-sharded (edge-parallel MP)
+  * node feature/label arrays — replicated (small) — the channel dim of
+    irrep features shards over 'model' via parameter propagation
+  * params — last dim sharded over 'model' when divisible (channel TP)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ...distributed import sharding as shr
+from ...train.optimizer import AdamWConfig, adamw_init, adamw_update
+from .common import GraphBatch
+
+
+def _param_specs(params_shape, mesh: Mesh):
+    tp = shr.axis_size(mesh, "model")
+
+    def spec(leaf):
+        if leaf.ndim >= 2 and leaf.shape[-1] % tp == 0 and leaf.shape[-1] >= tp:
+            return P(*([None] * (leaf.ndim - 1) + ["model"]))
+        return P()
+
+    return jax.tree.map(spec, params_shape)
+
+
+def _graph_args(spec: dict, arch: str, mesh: Mesh):
+    """ShapeDtypeStruct batch + shardings for one shape spec."""
+    dp = shr.dp_axes(mesh)
+    equivariant = arch in ("mace", "equiformer_v2")
+    kind = spec["kind"]
+    if kind == "molecule":
+        B, nn, ne = spec["batch"], spec["n_nodes"], spec["n_edges"]
+        N, E = B * nn, B * ne
+        n_graphs = B
+    else:
+        N, E = spec["n_nodes"], spec["n_edges"]
+        n_graphs = 1
+    E = -(-E // 512) * 512  # pad edges to a DP-shardable multiple (masked)
+
+    f32, i32 = jnp.float32, jnp.int32
+    batch = {
+        "src": jax.ShapeDtypeStruct((E,), i32),
+        "dst": jax.ShapeDtypeStruct((E,), i32),
+        "edge_mask": jax.ShapeDtypeStruct((E,), f32),
+    }
+    shard = {
+        "src": NamedSharding(mesh, P(dp)),
+        "dst": NamedSharding(mesh, P(dp)),
+        "edge_mask": NamedSharding(mesh, P(dp)),
+    }
+    if equivariant:
+        batch["pos"] = jax.ShapeDtypeStruct((N, 3), f32)
+        batch["species"] = jax.ShapeDtypeStruct((N,), i32)
+        batch["labels"] = jax.ShapeDtypeStruct((n_graphs,), f32)
+        shard["pos"] = NamedSharding(mesh, P())
+        shard["species"] = NamedSharding(mesh, P())
+        shard["labels"] = NamedSharding(mesh, P())
+        if kind == "molecule":
+            batch["graph_id"] = jax.ShapeDtypeStruct((N,), i32)
+            shard["graph_id"] = NamedSharding(mesh, P())
+    else:
+        batch["x"] = jax.ShapeDtypeStruct((N, spec.get("d_feat", 16)), f32)
+        batch["labels"] = jax.ShapeDtypeStruct((N,), i32)
+        shard["x"] = NamedSharding(mesh, P())
+        shard["labels"] = NamedSharding(mesh, P())
+    if kind == "minibatch":
+        batch["node_mask"] = jax.ShapeDtypeStruct((N,), f32)
+        shard["node_mask"] = NamedSharding(mesh, P())
+    return batch, shard, N, E, n_graphs
+
+
+def build_cell(arch: str, shape_name: str, spec: dict, mesh: Mesh, Cell):
+    from ... import configs as configs_pkg
+    mod = configs_pkg.get(arch)
+    equivariant = arch in ("mace", "equiformer_v2")
+    kind = spec["kind"]
+
+    import dataclasses
+    import os
+    if arch in ("gatedgcn", "pna"):
+        readout = "graph" if kind == "molecule" else "node"
+        d_in = spec.get("d_feat", 16) if kind != "molecule" else 16
+        cfg = mod.config(d_in=d_in, n_classes=spec.get("n_classes", 1),
+                         readout=readout)
+    else:
+        cfg = mod.config()
+        if (arch == "equiformer_v2"
+                and os.environ.get("REPRO_GNN_CHANNEL_SHARD") == "1"):
+            cfg = dataclasses.replace(cfg, channel_shard_axis="model")  # §Perf E1
+
+    if arch == "gatedgcn":
+        from . import gatedgcn as m
+    elif arch == "pna":
+        from . import pna as m
+    elif arch == "mace":
+        from . import mace as m
+    else:
+        from . import equiformer_v2 as m
+
+    batch_args, batch_shard, N, E, n_graphs = _graph_args(spec, arch, mesh)
+    if arch in ("gatedgcn", "pna") and kind == "molecule":
+        # feature-GNNs on molecule cells consume random node features
+        batch_args["x"] = jax.ShapeDtypeStruct((N, 16), jnp.float32)
+        batch_shard["x"] = NamedSharding(mesh, P())
+        batch_args["graph_id"] = jax.ShapeDtypeStruct((N,), jnp.int32)
+        batch_shard["graph_id"] = NamedSharding(mesh, P())
+        batch_args["labels"] = jax.ShapeDtypeStruct((n_graphs,), jnp.float32)
+        batch_shard["labels"] = NamedSharding(mesh, P())
+        batch_args.pop("pos", None)
+        batch_args.pop("species", None)
+
+    params_shape = jax.eval_shape(
+        lambda: m.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = _param_specs(params_shape, mesh)
+    pshard = shr.tree_shardings(pspecs, mesh)
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    ospecs = shr.opt_state_specs(pspecs, params_shape, mesh)
+    oshard = shr.tree_shardings(ospecs, mesh)
+    opt_cfg = AdamWConfig()
+    ng = n_graphs
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            g = GraphBatch(
+                src=batch["src"], dst=batch["dst"], x=batch.get("x"),
+                pos=batch.get("pos"), species=batch.get("species"),
+                node_mask=batch.get("node_mask"),
+                edge_mask=batch.get("edge_mask"),
+                graph_id=batch.get("graph_id"), n_graphs=ng)
+            return m.loss_fn(p, g, batch["labels"], cfg)
+
+        lval, grads = jax.value_and_grad(loss)(params)
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, lval
+
+    n_params = int(sum(np.prod(l.shape) for l in jax.tree.leaves(params_shape)))
+    return Cell(arch, shape_name, "gnn_train", train_step,
+                (params_shape, opt_shape, batch_args),
+                (pshard, oshard, batch_shard), donate_argnums=(0, 1),
+                meta={"n_nodes": N, "n_edges": E, "n_params": n_params,
+                      "n_graphs": ng, "fwd_bwd": True})

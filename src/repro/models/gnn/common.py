@@ -1,0 +1,113 @@
+"""Shared GNN substrate: message passing via segment reductions over an
+edge index (JAX sparse is BCOO-only — scatter/segment IS the system here),
+graph batch containers, and degree utilities.
+
+The edge-index + segment_sum formulation is the same machinery as the
+paper's CSR topology store (core.storage) — one gather per hop + one
+scatter-reduce, which shards edge-parallel over the 'data' mesh axis."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Static-shape (padded) graph batch.
+    x: (N, F) node features; edge_index src/dst: (E,); edge_attr: (E, Fe);
+    node_mask/edge_mask: validity; graph_id: (N,) for pooled readout over
+    G graphs (batched small molecules); pos: (N, 3) for equivariant nets."""
+    src: jax.Array
+    dst: jax.Array
+    x: Optional[jax.Array] = None
+    edge_attr: Optional[jax.Array] = None
+    pos: Optional[jax.Array] = None
+    species: Optional[jax.Array] = None
+    node_mask: Optional[jax.Array] = None
+    edge_mask: Optional[jax.Array] = None
+    graph_id: Optional[jax.Array] = None
+    n_graphs: int = 1
+
+    @property
+    def n_nodes(self) -> int:
+        for a in (self.x, self.pos, self.species):
+            if a is not None:
+                return a.shape[0]
+        raise ValueError("empty batch")
+
+    @property
+    def n_edges(self) -> int:
+        return self.src.shape[0]
+
+
+def scatter_sum(messages: jax.Array, dst: jax.Array, n_nodes: int) -> jax.Array:
+    return jax.ops.segment_sum(messages, dst, num_segments=n_nodes)
+
+
+def scatter_max(messages: jax.Array, dst: jax.Array, n_nodes: int) -> jax.Array:
+    return jax.ops.segment_max(messages, dst, num_segments=n_nodes)
+
+
+def scatter_min(messages: jax.Array, dst: jax.Array, n_nodes: int) -> jax.Array:
+    return jax.ops.segment_min(messages, dst, num_segments=n_nodes)
+
+
+def scatter_mean(messages: jax.Array, dst: jax.Array, n_nodes: int,
+                 eps: float = 1e-9) -> jax.Array:
+    s = scatter_sum(messages, dst, n_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones((messages.shape[0], 1),
+                                       messages.dtype), dst, n_nodes)
+    return s / (cnt + eps)
+
+
+def scatter_softmax(scores: jax.Array, dst: jax.Array, n_nodes: int
+                    ) -> jax.Array:
+    """Edge softmax: normalize scores over incoming edges of each dst node.
+    scores: (E, H)."""
+    smax = jax.ops.segment_max(scores, dst, num_segments=n_nodes)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - smax[dst])
+    denom = jax.ops.segment_sum(ex, dst, num_segments=n_nodes)
+    return ex / (denom[dst] + 1e-16)
+
+
+def degrees(dst: jax.Array, n_nodes: int, edge_mask=None) -> jax.Array:
+    ones = jnp.ones_like(dst, jnp.float32)
+    if edge_mask is not None:
+        ones = ones * edge_mask
+    return jax.ops.segment_sum(ones, dst, num_segments=n_nodes)
+
+
+def graph_pool(x: jax.Array, graph_id: jax.Array, n_graphs: int,
+               node_mask=None, mode: str = "sum") -> jax.Array:
+    if node_mask is not None:
+        x = x * node_mask[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(x, graph_id, num_segments=n_graphs)
+    if mode == "mean":
+        s = jax.ops.segment_sum(x, graph_id, num_segments=n_graphs)
+        c = jax.ops.segment_sum(
+            (node_mask if node_mask is not None
+             else jnp.ones(x.shape[0], x.dtype)), graph_id, n_graphs)
+        return s / jnp.maximum(c, 1)[:, None]
+    raise ValueError(mode)
+
+
+def mlp_params(rng, dims, name=""):
+    keys = jax.random.split(rng, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (a, b), jnp.float32) * (a ** -0.5),
+             "b": jnp.zeros((b,), jnp.float32)}
+            for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:]))]
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act=False):
+    for i, lyr in enumerate(layers):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x

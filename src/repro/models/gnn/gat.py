@@ -1,0 +1,80 @@
+"""GAT / GATv2 [arXiv:1710.10903 / arXiv:2105.14491] — extra (non-assigned)
+pool architecture exercising the SDDMM -> edge-softmax -> SpMM regime.
+
+    e_ij = LeakyReLU(a^T [W h_i || W h_j])        (GAT)
+    e_ij = a^T LeakyReLU(W [h_i || h_j])          (GATv2)
+    alpha = edge_softmax(e); h'_i = ||_heads sum_j alpha_ij W h_j
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import GraphBatch, scatter_softmax, scatter_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat"
+    n_layers: int = 3
+    d_hidden: int = 64
+    n_heads: int = 4
+    d_in: int = 1433
+    n_classes: int = 7
+    v2: bool = True
+    negative_slope: float = 0.2
+
+
+def init_params(rng, cfg: GATConfig):
+    L, H, dh = cfg.n_layers, cfg.n_heads, cfg.d_hidden // cfg.n_heads
+    k = jax.random.split(rng, 2 * L + 2)
+    layers = []
+    d_prev = cfg.d_hidden
+    for i in range(L):
+        layers.append({
+            "W": jax.random.normal(k[2 * i], (d_prev, H, dh)) * d_prev ** -0.5,
+            "a_src": jax.random.normal(k[2 * i + 1], (H, dh)) * dh ** -0.5,
+            "a_dst": jax.random.normal(jax.random.fold_in(k[2 * i + 1], 1),
+                                       (H, dh)) * dh ** -0.5,
+        })
+    return {"embed": jax.random.normal(k[-2], (cfg.d_in, cfg.d_hidden))
+            * cfg.d_in ** -0.5,
+            "layers": layers,
+            "head": jax.random.normal(k[-1], (cfg.d_hidden, cfg.n_classes))
+            * cfg.d_hidden ** -0.5}
+
+
+def forward(params, g: GraphBatch, cfg: GATConfig):
+    n = g.n_nodes
+    H, dh = cfg.n_heads, cfg.d_hidden // cfg.n_heads
+    h = g.x @ params["embed"]
+    slope = cfg.negative_slope
+    for lp in params["layers"]:
+        hw = jnp.einsum("nd,dhe->nhe", h, lp["W"])          # (N, H, dh)
+        if cfg.v2:
+            z = hw[g.src] + hw[g.dst]                        # (E, H, dh)
+            scores = jnp.einsum("ehd,hd->eh",
+                                jax.nn.leaky_relu(z, slope), lp["a_src"])
+        else:
+            s_src = jnp.einsum("nhe,he->nh", hw, lp["a_src"])
+            s_dst = jnp.einsum("nhe,he->nh", hw, lp["a_dst"])
+            scores = jax.nn.leaky_relu(s_src[g.src] + s_dst[g.dst], slope)
+        if g.edge_mask is not None:
+            scores = jnp.where(g.edge_mask[:, None] > 0, scores, -1e30)
+        alpha = scatter_softmax(scores, g.dst, n)            # (E, H)
+        msg = hw[g.src] * alpha[..., None]
+        agg = scatter_sum(msg.reshape(-1, H * dh), g.dst, n)
+        h = jax.nn.elu(agg) + h
+    return h @ params["head"]
+
+
+def loss_fn(params, g: GraphBatch, labels, cfg: GATConfig):
+    logits = forward(params, g, cfg)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    if g.node_mask is not None:
+        mask = mask * g.node_mask
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)

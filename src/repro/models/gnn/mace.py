@@ -1,0 +1,178 @@
+"""MACE [arXiv:2206.07697]: higher-order equivariant message passing via the
+ACE product basis.
+
+Faithful structure, TPU-adapted:
+  * A-basis: A_i = sum_j R(r_ij) * CG[ Y(r_hat_ij) (x) h_j ]  (one gather +
+    segment_sum per CG path — the SpMM regime of the kernel taxonomy).
+  * B-basis: iterated CG products A, (A(x)A), ((A(x)A)(x)A) up to the
+    assigned correlation_order=3, path-weighted per channel. (The fully
+    symmetrized generalized contraction of the paper is algebraically a
+    re-parameterization of these iterated pairwise contractions restricted
+    to l <= l_max; we document this simplification in DESIGN.md.)
+  * Radial: n_rbf=8 Bessel basis with polynomial cutoff -> MLP -> per-path
+    weights.
+
+Config (assigned): n_layers=2, d_hidden=128 channels, l_max=2,
+correlation_order=3, n_rbf=8, E(3)-equivariant (tested by rotation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import so3
+from .common import GraphBatch, mlp_apply, mlp_params, scatter_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    channels: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    n_species: int = 16
+    r_cut: float = 5.0
+
+    @property
+    def sh_dim(self) -> int:
+        return so3.sh_dim(self.l_max)
+
+
+def _paths(l_max: int):
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                out.append((l1, l2, l3))
+    return out
+
+
+def init_params(rng, cfg: MACEConfig):
+    C, L = cfg.channels, cfg.n_layers
+    paths = _paths(cfg.l_max)
+    k = jax.random.split(rng, 8 + L)
+    params = {
+        "species_embed": jax.random.normal(k[0], (cfg.n_species, C)) * 0.3,
+        "layers": [],
+        "readouts": [],
+    }
+    for i in range(L):
+        kk = jax.random.split(k[1 + i], 8)
+        params["layers"].append({
+            "radial": mlp_params(kk[0], [cfg.n_rbf, 64, len(paths) * C]),
+            "w_msg": jax.random.normal(kk[1], (cfg.l_max + 1, C, C)) * C ** -0.5,
+            "w_p2": jax.random.normal(kk[2], (len(paths), C)) * 0.3,
+            "w_p3": jax.random.normal(kk[3], (len(paths), C)) * 0.3,
+            "w_self": jax.random.normal(kk[4], (cfg.l_max + 1, C, C)) * C ** -0.5,
+            "w_comb": jax.random.normal(kk[5], (3, cfg.l_max + 1, C)) * 0.5,
+        })
+        params["readouts"].append(mlp_params(jax.random.split(k[4 + L], 2)[0],
+                                             [C, 64, 1]))
+    return params
+
+
+def _bessel(r, n_rbf, r_cut):
+    """Bessel radial basis with smooth polynomial cutoff."""
+    x = jnp.clip(r / r_cut, 1e-4, 1.0)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    rb = jnp.sqrt(2.0 / r_cut) * jnp.sin(n * math.pi * x[..., None]) / (
+        x[..., None] * r_cut)
+    u = 1 - 10 * x ** 3 + 15 * x ** 4 - 6 * x ** 5   # C2 cutoff poly
+    return rb * u[..., None]
+
+
+def _cg_combine(a, b, l_max, path_w, paths):
+    """a, b: (B, dim, C) irreps; path_w: (n_paths, C) or per-path list.
+    Returns (B, dim, C) = sum over paths of weighted CG products."""
+    dim = so3.sh_dim(l_max)
+    out = jnp.zeros(a.shape[:-2] + (dim, a.shape[-1]), a.dtype)
+    for pi, (l1, l2, l3) in enumerate(paths):
+        Ct = jnp.asarray(so3.real_cg(l1, l2, l3), a.dtype)
+        s1, s2, s3 = l1 * l1, l2 * l2, l3 * l3
+        blk = jnp.einsum("...ic,...jc,ijk->...kc",
+                         a[..., s1:s1 + 2 * l1 + 1, :],
+                         b[..., s2:s2 + 2 * l2 + 1, :], Ct)
+        out = out.at[..., s3:s3 + 2 * l3 + 1, :].add(blk * path_w[pi])
+    return out
+
+
+def forward(params, g: GraphBatch, cfg: MACEConfig):
+    """Returns per-graph energies (n_graphs,)."""
+    N = g.n_nodes
+    C, dim = cfg.channels, cfg.sh_dim
+    paths = _paths(cfg.l_max)
+
+    # node irreps: scalars initialized from species embedding
+    h = jnp.zeros((N, dim, C), jnp.float32)
+    h = h.at[:, 0, :].set(params["species_embed"][g.species])
+
+    vec = g.pos[g.dst] - g.pos[g.src]
+    r = jnp.linalg.norm(vec + 1e-12, axis=-1)
+    r_hat = vec / (r[:, None] + 1e-9)
+    Y = so3.real_sph_harm(r_hat, cfg.l_max)          # (E, dim)
+    rbf = _bessel(r, cfg.n_rbf, cfg.r_cut)           # (E, n_rbf)
+    edge_valid = (r > 1e-6).astype(jnp.float32)      # zero-length edges are
+    if g.edge_mask is not None:                      # frame-degenerate: drop
+        edge_valid = edge_valid * g.edge_mask
+
+    energies = 0.0
+    for lp, readout in zip(params["layers"], params["readouts"]):
+        radial = mlp_apply(lp["radial"], rbf) * edge_valid[:, None]
+        radial = radial.reshape(-1, len(paths), C)
+
+        # --- A-basis: per-path CG of Y (as (E, dim, 1)) with h_src ---
+        A = jnp.zeros((N, dim, C), jnp.float32)
+        h_src = h[g.src]
+        for pi, (l1, l2, l3) in enumerate(paths):
+            Ct = jnp.asarray(so3.real_cg(l1, l2, l3), jnp.float32)
+            s1, s2, s3 = l1 * l1, l2 * l2, l3 * l3
+            msg = jnp.einsum("ei,ejc,ijk->ekc",
+                             Y[:, s1:s1 + 2 * l1 + 1],
+                             h_src[:, s2:s2 + 2 * l2 + 1, :], Ct)
+            msg = msg * radial[:, pi, None, :]
+            A = A.at[:, s3:s3 + 2 * l3 + 1, :].add(
+                scatter_sum(msg, g.dst, N))
+        # per-l channel mixing of the aggregated A-basis
+        A_mixed = jnp.zeros_like(A)
+        for l in range(cfg.l_max + 1):
+            sl = slice(l * l, l * l + 2 * l + 1)
+            A_mixed = A_mixed.at[:, sl, :].set(
+                jnp.einsum("nmc,cd->nmd", A[:, sl, :], lp["w_msg"][l]))
+        A = A_mixed
+
+        # --- B-basis: iterated CG products (correlation order 3) ---
+        B2 = _cg_combine(A, A, cfg.l_max, lp["w_p2"], paths)
+        B3 = _cg_combine(B2, A, cfg.l_max, lp["w_p3"], paths)
+
+        # --- update: per-l self-interaction + weighted B-basis sum ---
+        h_new = jnp.zeros_like(h)
+        for l in range(cfg.l_max + 1):
+            s = l * l
+            sl = slice(s, s + 2 * l + 1)
+            self_mix = jnp.einsum("nmc,cd->nmd", h[:, sl, :], lp["w_self"][l])
+            h_new = h_new.at[:, sl, :].set(
+                self_mix
+                + lp["w_comb"][0, l] * A[:, sl, :]
+                + lp["w_comb"][1, l] * B2[:, sl, :]
+                + lp["w_comb"][2, l] * B3[:, sl, :])
+        h = h_new
+
+        # --- readout from invariants ---
+        node_e = mlp_apply(readout, h[:, 0, :])[:, 0]     # (N,)
+        if g.node_mask is not None:
+            node_e = node_e * g.node_mask
+        energies = energies + jax.ops.segment_sum(
+            node_e, g.graph_id if g.graph_id is not None
+            else jnp.zeros((N,), jnp.int32), g.n_graphs)
+    return energies
+
+
+def loss_fn(params, g: GraphBatch, energy_labels, cfg: MACEConfig):
+    pred = forward(params, g, cfg)
+    return jnp.mean((pred - energy_labels) ** 2)

@@ -1,0 +1,86 @@
+"""PNA — Principal Neighbourhood Aggregation [arXiv:2004.05718]:
+4 aggregators (mean/max/min/std) x 3 scalers (identity/amplification/
+attenuation) -> 12-way concat -> linear, with a pairwise message MLP.
+
+Config (assigned): n_layers=4, d_hidden=75, aggregators mean-max-min-std,
+scalers id-amp-atten.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .common import (GraphBatch, degrees, graph_pool, mlp_apply, mlp_params,
+                     scatter_max, scatter_mean, scatter_min, scatter_sum)
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 1433
+    n_classes: int = 16
+    avg_log_deg: float = 2.3      # normalizing constant (dataset statistic)
+    readout: str = "node"
+
+
+def init_params(rng, cfg: PNAConfig):
+    d = cfg.d_hidden
+    keys = jax.random.split(rng, cfg.n_layers * 2 + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "msg": mlp_params(keys[2 * i], [2 * d, d, d]),
+            "upd": mlp_params(keys[2 * i + 1], [12 * d + d, d]),
+            "ln": jnp.ones((d,)),
+        })
+    return {
+        "embed": jax.random.normal(keys[-2], (cfg.d_in, d)) * cfg.d_in ** -0.5,
+        "layers": layers,     # list (heterogeneous MLPs) — python loop, 4 layers
+        "head": jax.random.normal(keys[-1], (d, cfg.n_classes)) * d ** -0.5,
+    }
+
+
+def forward(params, g: GraphBatch, cfg: PNAConfig):
+    n = g.n_nodes
+    h = g.x @ params["embed"]
+    deg = degrees(g.dst, n, g.edge_mask)
+    log_deg = jnp.log(deg + 1.0)[:, None]
+    amp = log_deg / cfg.avg_log_deg
+    att = cfg.avg_log_deg / jnp.maximum(log_deg, 1e-6)
+
+    for lp in params["layers"]:
+        m = mlp_apply(lp["msg"], jnp.concatenate([h[g.src], h[g.dst]], -1))
+        if g.edge_mask is not None:
+            m = m * g.edge_mask[:, None]
+        mean = scatter_mean(m, g.dst, n)
+        mx = jnp.where(deg[:, None] > 0,
+                       jnp.maximum(scatter_max(m, g.dst, n), -1e30), 0.0)
+        mn = jnp.where(deg[:, None] > 0,
+                       jnp.minimum(scatter_min(m, g.dst, n), 1e30), 0.0)
+        var = scatter_mean(m * m, g.dst, n) - mean * mean
+        std = jnp.sqrt(jnp.maximum(var, 0.0) + 1e-10)
+        aggs = jnp.concatenate([mean, mx, mn, std], -1)            # (N, 4d)
+        scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], -1)  # 12d
+        mu = jnp.mean(h, -1, keepdims=True)
+        var_h = jnp.var(h, -1, keepdims=True)
+        h = h + mlp_apply(lp["upd"], jnp.concatenate([h, scaled], -1))
+        h = (h - jnp.mean(h, -1, keepdims=True)) * jax.lax.rsqrt(
+            jnp.var(h, -1, keepdims=True) + 1e-5) * lp["ln"]
+    return h @ params["head"]
+
+
+def loss_fn(params, g: GraphBatch, labels, cfg: PNAConfig):
+    logits = forward(params, g, cfg)
+    if cfg.readout == "graph":
+        pooled = graph_pool(logits, g.graph_id, g.n_graphs, g.node_mask)
+        return jnp.mean((pooled[:, 0] - labels) ** 2)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    if g.node_mask is not None:
+        mask = mask * g.node_mask
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)

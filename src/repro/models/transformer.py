@@ -1,0 +1,656 @@
+"""Decoder-only LM transformer: dense + MoE, GQA, RoPE, optional QKV bias.
+
+Framework notes (scale posture):
+  * Parameters are stacked over layers and the layer loop is a single
+    ``lax.scan`` — O(1) HLO size in depth, which keeps 512-device SPMD
+    compiles tractable and enables per-layer remat.
+  * Attention is a chunked double-scan (online softmax over KV chunks) — the
+    pure-jnp analogue of the Pallas flash kernel, used off-TPU and inside
+    dry-runs; on TPU the Pallas kernel is selected via ``attn_impl='flash'``.
+  * MoE uses sort-based top-k dispatch into (E, C) capacity buffers — FLOPs
+    scale with tokens*k*capacity_factor, not tokens*E (no dense-all-experts
+    waste), and the expert dim shards over the 'model' mesh axis (EP).
+  * All activations/constants are bf16 with fp32 params, RMSNorm/softmax/CE
+    in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "tiny"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 256
+    vocab: int = 1000
+    # MoE (n_experts=0 -> dense)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # variants
+    qkv_bias: bool = False
+    mlp: str = "swiglu"              # "swiglu" | "gelu"
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # execution
+    d_head: int = 0                  # 0 -> d_model // n_heads
+    attn_impl: str = "chunked"       # "chunked" | "dense" | "flash"
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    attn_window: int = 0             # >0 -> sliding-window attention (opt-in)
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+    ce_chunk: int = 256              # cross-entropy sequence chunking
+    moe_groups: int = 1              # dispatch groups (== DP shards at scale,
+                                     # so top-k sort/capacity stay shard-local)
+    # distribution hooks (set by launch/specs.py; None/empty for local runs)
+    mesh: Any = None                 # jax Mesh for shard_map-based paths
+    mesh_dp: tuple = ()              # data-parallel axis names
+    kv_seq_shard: str = ""           # mesh axis sharding the KV-cache seq dim
+    moe_ep_axis: str = ""            # mesh axis for expert-parallel reshard
+    moe_impl: str = "gspmd"          # "gspmd" | "shard_map" (§Perf M2)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def param_count(self) -> int:
+        d, h, kv, dh, f, v, L = (self.d_model, self.n_heads, self.n_kv_heads,
+                                 self.head_dim, self.d_ff, self.vocab, self.n_layers)
+        attn = d * h * dh + 2 * d * kv * dh + h * dh * d
+        if self.qkv_bias:
+            attn += (h + 2 * kv) * dh
+        n_mats = 3 if self.mlp == "swiglu" else 2
+        if self.is_moe:
+            mlp = self.n_experts * n_mats * d * f + d * self.n_experts
+        else:
+            mlp = n_mats * d * f
+        per_layer = attn + mlp + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return L * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        n_mats = 3 if self.mlp == "swiglu" else 2
+        dense_like = dataclasses.replace(self, n_experts=0)
+        inactive = self.n_layers * n_mats * d * f * (self.n_experts - self.top_k)
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (stacked layers)
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng: jax.Array, cfg: TransformerConfig) -> Pytree:
+    d, h, kv, dh, f, v, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                             cfg.head_dim, cfg.d_ff, cfg.vocab, cfg.n_layers)
+    keys = jax.random.split(rng, 12)
+
+    def norm_init(k, *shape, scale=None):
+        scale = scale if scale is not None else (shape[-2]) ** -0.5
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    layer = {
+        "wq": norm_init(keys[0], L, d, h * dh),
+        "wk": norm_init(keys[1], L, d, kv * dh),
+        "wv": norm_init(keys[2], L, d, kv * dh),
+        "wo": norm_init(keys[3], L, h * dh, d),
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "ln2": jnp.ones((L, d), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = jnp.zeros((L, h * dh), jnp.float32)
+        layer["bk"] = jnp.zeros((L, kv * dh), jnp.float32)
+        layer["bv"] = jnp.zeros((L, kv * dh), jnp.float32)
+    if cfg.norm == "layernorm":
+        layer["ln1_b"] = jnp.zeros((L, d), jnp.float32)
+        layer["ln2_b"] = jnp.zeros((L, d), jnp.float32)
+
+    n_mats = 3 if cfg.mlp == "swiglu" else 2
+    if cfg.is_moe:
+        E = cfg.n_experts
+        layer["router"] = norm_init(keys[4], L, d, E)
+        layer["w_in"] = norm_init(keys[5], L, E, d, f)
+        if n_mats == 3:
+            layer["w_gate"] = norm_init(keys[6], L, E, d, f)
+        layer["w_out"] = norm_init(keys[7], L, E, f, d, scale=f ** -0.5)
+    else:
+        layer["w_in"] = norm_init(keys[5], L, d, f)
+        if n_mats == 3:
+            layer["w_gate"] = norm_init(keys[6], L, d, f)
+        layer["w_out"] = norm_init(keys[7], L, f, d, scale=f ** -0.5)
+
+    params = {
+        "embed": jax.random.normal(keys[8], (v, d), jnp.float32) * 0.02,
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = norm_init(keys[9], d, v)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def _norm(x, w, b=None):
+    xf = x.astype(jnp.float32)
+    if b is None:  # rmsnorm
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y * w
+    if b is not None:
+        y = y + b
+    return y.astype(x.dtype)
+
+
+def _rope(x, positions, theta):
+    """x: (B, S, H, Dh); positions: (B, S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           -1).astype(x.dtype)
+
+
+def _dense_attention(q, k, v, lengths, causal, window=0):
+    """q: (B,H,S,D), k/v: (B,Hk,Skv,D). Oracle / small-shape path."""
+    B, H, S, D = q.shape
+    Hk, Skv = k.shape[1], k.shape[2]
+    g = H // Hk
+    qg = q.reshape(B, Hk, g, S, D)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * D ** -0.5
+    kpos = jnp.arange(Skv)[None, None, None, None, :]
+    mask = kpos < lengths[:, None, None, None, None]
+    qpos = (lengths[:, None, None, None, None] - S
+            + jnp.arange(S)[None, None, None, :, None])
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, -1, keepdims=True)
+    p = jnp.exp(s - m) * mask  # fully-masked rows -> exactly zero output
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, lengths, causal, q_chunk, kv_chunk, window=0):
+    """Flash-style online-softmax double scan (jnp). Memory per step is
+    O(B*H*qc*kc) instead of O(B*H*S*Skv)."""
+    B, H, S, D = q.shape
+    Hk, Skv = k.shape[1], k.shape[2]
+    g = H // Hk
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, Skv)
+    qpad, kpad = (-S) % qc, (-Skv) % kc
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    nq, nk = (S + qpad) // qc, (Skv + kpad) // kc
+    qr = jnp.moveaxis(q.reshape(B, Hk, g, nq, qc, D), 3, 0)   # (nq,B,Hk,g,qc,D)
+    kr = jnp.moveaxis(k.reshape(B, Hk, nk, kc, D), 2, 0)       # (nk,B,Hk,kc,D)
+    vr = jnp.moveaxis(v.reshape(B, Hk, nk, kc, D), 2, 0)
+
+    scale = D ** -0.5
+    len_b = lengths[:, None, None, None, None]                  # (B,1,1,1,1)
+
+    def q_step(_, qi):
+        qblk, iq = qi                                           # (B,Hk,g,qc,D)
+        qpos = (lengths[:, None, None, None, None] - S + iq * qc
+                + jnp.arange(qc)[None, None, None, :, None])
+
+        def kv_step(carry, kvj):
+            m, l, acc = carry
+            kblk, vblk, jk = kvj
+            # preferred_element_type (not astype) so no f32 copy of the KV
+            # cache is ever materialized — the MXU accumulates in f32
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = jk * kc + jnp.arange(kc)[None, None, None, None, :]
+            mask = kpos < len_b
+            if causal:
+                mask &= qpos >= kpos
+            if window:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, -1, keepdims=True))
+            p = jnp.exp(s - m_new) * mask
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, -1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hk, g, qc, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hk, g, qc, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hk, g, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kr, vr, jnp.arange(nk)))
+        o = acc / jnp.where(l == 0.0, 1.0, l)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))  # (nq,B,Hk,g,qc,D)
+    o = jnp.moveaxis(outs, 0, 3).reshape(B, Hk, g, (S + qpad), D)
+    return o.reshape(B, H, S + qpad, D)[:, :, :S]
+
+
+def _dist_decode_attention(q, k, v, lengths, cfg: TransformerConfig):
+    """Distributed flash-decode: KV cache sharded on the SEQUENCE dim over
+    ``cfg.kv_seq_shard``; each shard computes partial online-softmax stats
+    (m, l, acc) over its KV slice and the shards merge with one pmax + two
+    psums — per-device HBM traffic drops by the axis size (the §Perf D2
+    optimization; beyond-paper, the paper's engine is single-node).
+
+    q: (B, H, S, dh) batch-sharded; k/v: (B, Hk, M, dh) batch- and
+    seq-sharded; lengths: (B,)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = cfg.kv_seq_shard
+    dp = tuple(cfg.mesh_dp) or None
+    B, H, S, Dh = q.shape
+    Hk = k.shape[1]
+    g = H // Hk
+    scale = Dh ** -0.5
+
+    def local_fn(qb, kb, vb, lb):
+        idx = jax.lax.axis_index(axis)
+        Bl = qb.shape[0]
+        Ml = kb.shape[2]
+        qg = qb.reshape(Bl, Hk, g, S, Dh)
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = idx * Ml + jnp.arange(Ml)[None, None, None, None, :]
+        lb_b = lb[:, None, None, None, None]
+        mask = kpos < lb_b
+        qpos = (lb_b - S) + jnp.arange(S)[None, None, None, :, None]
+        mask &= qpos >= kpos
+        s = jnp.where(mask, s, -1e30)
+        m = jnp.max(s, -1, keepdims=True)
+        p = jnp.exp(s - m) * mask
+        l = jnp.sum(p, -1, keepdims=True)
+        acc = jnp.einsum("bkgqc,bkcd->bkgqd", p.astype(vb.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        m_g = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axis)
+        acc_g = jax.lax.psum(acc * corr, axis)
+        o = acc_g / jnp.where(l_g == 0.0, 1.0, l_g)
+        return o.reshape(Bl, H, S, Dh).astype(qb.dtype)
+
+    return shard_map(
+        local_fn, mesh=cfg.mesh,
+        in_specs=(P(dp, None, None, None), P(dp, None, axis, None),
+                  P(dp, None, axis, None), P(dp)),
+        out_specs=P(dp, None, None, None))(q, k, v, lengths)
+
+
+def _moe_block(x, router_w, w_in, w_gate, w_out, cfg: TransformerConfig):
+    """Sort-based top-k MoE dispatch, grouped-native. x: (G, T, d) with one
+    group per DP shard -> sort/capacity are shard-local. Returns ((G, T, d),
+    aux).
+
+    With ``cfg.moe_ep_axis`` set, explicit sharding constraints pin the
+    dispatch buffers to (dp, E-over-model) between the scatter and the
+    expert einsums — GSPMD then lowers the reshard as token all-to-all
+    (§Perf M1) instead of all-reducing the full dispatch buffer.
+    """
+    G, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(int(np.ceil(T * k / E * cfg.capacity_factor)), 1)
+
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32), router_w)
+    gates, idx = jax.lax.top_k(logits, k)                # (G, T, k)
+    gates = jax.nn.softmax(gates, -1).astype(cfg.dtype)
+
+    flat_e = idx.reshape(G, T * k)
+    flat_gate = gates.reshape(G, T * k)
+    order = jnp.argsort(flat_e, axis=-1)                 # stable
+    sorted_e = jnp.take_along_axis(flat_e, order, -1)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, -1)
+    token_of = order // k                                # (G, T*k)
+    seg_start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(
+        sorted_e)                                        # (G, E)
+    pos = jnp.arange(T * k)[None, :] - jnp.take_along_axis(
+        seg_start, sorted_e, -1)
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)    # E*C = drop bin
+
+    xg = jnp.take_along_axis(x, token_of[..., None], axis=1)   # (G, T*k, d)
+    upd = xg * keep[..., None]
+    buf = jax.vmap(lambda s, u: jnp.zeros((E * C + 1, d), cfg.dtype)
+                   .at[s].add(u))(slot, upd)
+    xe = buf[:, :-1].reshape(G, E, C, d)
+    xe = _ep_constraint(xe, cfg, expert_sharded=True)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, w_in.astype(cfg.dtype))
+    if w_gate is not None:
+        gatev = jnp.einsum("gecd,edf->gecf", xe, w_gate.astype(cfg.dtype))
+        h = jax.nn.silu(gatev) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("gecf,efd->gecd", h, w_out.astype(cfg.dtype))
+    ye = _ep_constraint(ye, cfg, expert_sharded=False)
+
+    ye_flat = ye.reshape(G, E * C, d)
+    contrib = jnp.take_along_axis(
+        ye_flat, jnp.where(keep, slot, 0)[..., None], axis=1) * jnp.where(
+        keep, sorted_gate, jnp.zeros_like(sorted_gate))[..., None]
+    out = jax.vmap(lambda t, c: jnp.zeros((T, d), cfg.dtype)
+                   .at[t].add(c))(token_of, contrib)
+    # load-balancing auxiliary loss (Switch): E * sum(fraction * prob)
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), (0, 1))
+    ce = jnp.mean(jax.nn.softmax(logits, -1), (0, 1))
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+def _moe_block_shard_map(x, router_w, w_in, w_gate, w_out,
+                         cfg: TransformerConfig):
+    """§Perf M2: expert-parallel MoE via shard_map. Activations are already
+    replicated across the EP ('model') axis, so each expert shard routes and
+    dispatches LOCALLY (zero dispatch collective: keep-mask restricted to
+    its own expert range) and the only cross-shard traffic is the (G, T, d)
+    partial-output psum — (T*d) bytes per layer instead of the (E*C*d)
+    dispatch-buffer reshard + its 4.3GB/layer backward cotangent all-reduce
+    that GSPMD generates for the constraint-based variant (M1)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = cfg.moe_ep_axis
+    dp = tuple(cfg.mesh_dp) or None
+    G, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    nsh = cfg.mesh.shape[axis]
+    E_l = E // nsh
+    C = max(int(np.ceil(T * k / E * cfg.capacity_factor)), 1)
+
+    def local_fn(xl, router_l, w_in_l, w_gate_l, w_out_l):
+        idx = jax.lax.axis_index(axis)
+        base = idx * E_l
+        Gl = xl.shape[0]
+        logits = jnp.einsum("gtd,de->gte", xl.astype(jnp.float32), router_l)
+        gates, top_i = jax.lax.top_k(logits, k)
+        gates = jax.nn.softmax(gates, -1).astype(cfg.dtype)
+        flat_e = top_i.reshape(Gl, T * k)
+        flat_g = gates.reshape(Gl, T * k)
+        order = jnp.argsort(flat_e, axis=-1)
+        sorted_e = jnp.take_along_axis(flat_e, order, -1)
+        sorted_gate = jnp.take_along_axis(flat_g, order, -1)
+        token_of = order // k
+        seg_start = jax.vmap(
+            lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+        pos = jnp.arange(T * k)[None, :] - jnp.take_along_axis(
+            seg_start, sorted_e, -1)
+        keep = (pos < C) & (sorted_e >= base) & (sorted_e < base + E_l)
+        slot = jnp.where(keep, (sorted_e - base) * C + pos, E_l * C)
+
+        xg = jnp.take_along_axis(xl, token_of[..., None], axis=1)
+        upd = xg * keep[..., None]
+        buf = jax.vmap(lambda s, u: jnp.zeros((E_l * C + 1, d), cfg.dtype)
+                       .at[s].add(u))(slot, upd)
+        xe = buf[:, :-1].reshape(Gl, E_l, C, d)
+        h = jnp.einsum("gecd,edf->gecf", xe, w_in_l.astype(cfg.dtype))
+        if w_gate_l is not None:
+            gv = jnp.einsum("gecd,edf->gecf", xe, w_gate_l.astype(cfg.dtype))
+            h = jax.nn.silu(gv) * h
+        else:
+            h = jax.nn.gelu(h)
+        ye = jnp.einsum("gecf,efd->gecd", h, w_out_l.astype(cfg.dtype))
+        ye_flat = ye.reshape(Gl, E_l * C, d)
+        contrib = jnp.take_along_axis(
+            ye_flat, jnp.where(keep, slot, 0)[..., None], axis=1) * jnp.where(
+            keep, sorted_gate, jnp.zeros_like(sorted_gate))[..., None]
+        out = jax.vmap(lambda t, c: jnp.zeros((T, d), cfg.dtype)
+                       .at[t].add(c))(token_of, contrib)
+        out = jax.lax.psum(out, axis)              # the only EP collective
+        me = jnp.mean(jax.nn.one_hot(top_i[..., 0], E, dtype=jnp.float32),
+                      (0, 1))
+        ce = jnp.mean(jax.nn.softmax(logits, -1), (0, 1))
+        aux = E * jnp.sum(me * ce)
+        if dp:
+            aux = jax.lax.pmean(aux, dp)   # average the balance stat over DP
+        return out, aux
+
+    w_gate_spec = P(axis, None, None) if w_gate is not None else None
+    args = [x, router_w, w_in]
+    specs = [P(dp, None, None), P(), P(axis, None, None)]
+    if w_gate is not None:
+        args.append(w_gate)
+        specs.append(P(axis, None, None))
+        fn = lambda xl, r, wi, wg, wo: local_fn(xl, r, wi, wg, wo)
+    else:
+        fn = lambda xl, r, wi, wo: local_fn(xl, r, wi, None, wo)
+    args.append(w_out)
+    specs.append(P(axis, None, None))
+    return shard_map(fn, mesh=cfg.mesh, in_specs=tuple(specs),
+                     out_specs=(P(dp, None, None), P()),
+                     check_rep=False)(*args)
+
+
+def _ep_constraint(x, cfg: TransformerConfig, expert_sharded: bool):
+    """(G, E, C, d) layout pin: G over DP; E over the EP axis pre-einsum,
+    replicated (token layout) post-einsum."""
+    if not cfg.moe_ep_axis or cfg.mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(cfg.mesh_dp) or None
+    spec = P(dp, cfg.moe_ep_axis if expert_sharded else None, None, None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(cfg.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Pytree, tokens: jax.Array, cfg: TransformerConfig, *,
+            lengths: Optional[jax.Array] = None,
+            cache: Optional[Pytree] = None,
+            cache_lengths: Optional[jax.Array] = None,
+            return_hidden: bool = False):
+    """tokens: (B, S). Training/prefill: cache=None. Decode: pass ``cache``
+    {k,v: (L, B, Hk, S_max, dh)} and ``cache_lengths`` (B,) = tokens already
+    in cache; returns (logits, new_cache).
+    """
+    B, S = tokens.shape
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+    if cache is not None:
+        positions = cache_lengths[:, None] + jnp.arange(S)[None, :]
+        total_lengths = cache_lengths + S
+    else:
+        if lengths is None:
+            lengths = jnp.full((B,), S, jnp.int32)
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        total_lengths = lengths
+
+    def layer_fn(carry, layer_and_cache):
+        x = carry
+        lp = layer_and_cache["p"]
+        lcache = layer_and_cache.get("c")
+
+        xa = _norm(x, lp["ln1"], lp.get("ln1_b"))
+        q = jnp.einsum("bsd,dh->bsh", xa, lp["wq"].astype(cfg.dtype))
+        kk = jnp.einsum("bsd,dh->bsh", xa, lp["wk"].astype(cfg.dtype))
+        vv = jnp.einsum("bsd,dh->bsh", xa, lp["wv"].astype(cfg.dtype))
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(cfg.dtype)
+            kk = kk + lp["bk"].astype(cfg.dtype)
+            vv = vv + lp["bv"].astype(cfg.dtype)
+        q = q.reshape(B, S, h, dh)
+        kk = kk.reshape(B, S, kv, dh)
+        vv = vv.reshape(B, S, kv, dh)
+        q = _rope(q, positions, cfg.rope_theta)
+        kk = _rope(kk, positions, cfg.rope_theta)
+        q = q.transpose(0, 2, 1, 3)          # (B, H, S, dh)
+        kk = kk.transpose(0, 2, 1, 3)
+        vv = vv.transpose(0, 2, 1, 3)
+
+        new_lcache = None
+        if lcache is not None:
+            # decode: insert new kv at positions cache_lengths..+S
+            kcache, vcache = lcache["k"], lcache["v"]
+
+            def upd(c, new):
+                # c: (B, Hk, M, dh); new: (B, Hk, S, dh); per-row start offset
+                def one(c_b, new_b, start):
+                    return jax.lax.dynamic_update_slice(c_b, new_b, (0, start, 0))
+                return jax.vmap(one)(c, new, cache_lengths)
+
+            kcache = upd(kcache, kk)
+            vcache = upd(vcache, vv)
+            new_lcache = {"k": kcache, "v": vcache}
+            katt, vatt = kcache, vcache
+            att_len = total_lengths
+        else:
+            katt, vatt = kk, vv
+            att_len = total_lengths
+
+        if cache is not None and cfg.kv_seq_shard:
+            o = _dist_decode_attention(q, katt, vatt, att_len, cfg)
+        elif cfg.attn_impl == "dense":
+            o = _dense_attention(q, katt, vatt, att_len, True, cfg.attn_window)
+        elif cfg.attn_impl == "flash":
+            from ..kernels.flash_attention.ops import flash_attention
+            o = flash_attention(q, katt, vatt, att_len, causal=True)
+        else:
+            o = _chunked_attention(q, katt, vatt, att_len, True,
+                                   cfg.q_chunk, cfg.kv_chunk, cfg.attn_window)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, h * dh)
+        x = x + jnp.einsum("bsh,hd->bsd", o, lp["wo"].astype(cfg.dtype))
+
+        xm = _norm(x, lp["ln2"], lp.get("ln2_b"))
+        if cfg.is_moe:
+            G = max(1, min(cfg.moe_groups, B))
+            xg = xm.reshape(G, B * S // G, d)
+            block = (_moe_block_shard_map
+                     if cfg.moe_impl == "shard_map" and cfg.moe_ep_axis
+                     else _moe_block)
+            moe = jax.checkpoint(  # nested remat: dispatch buffers are
+                lambda xv: block(xv, lp["router"], lp["w_in"],
+                                 lp.get("w_gate"), lp["w_out"], cfg),
+                prevent_cse=False)
+            y, aux = moe(xg)
+            y = y.reshape(B, S, d)
+        else:
+            hmid = jnp.einsum("bsd,df->bsf", xm, lp["w_in"].astype(cfg.dtype))
+            if cfg.mlp == "swiglu":
+                gate = jnp.einsum("bsd,df->bsf", xm, lp["w_gate"].astype(cfg.dtype))
+                hmid = jax.nn.silu(gate) * hmid
+            else:
+                hmid = jax.nn.gelu(hmid)
+            y = jnp.einsum("bsf,fd->bsd", hmid, lp["w_out"].astype(cfg.dtype))
+            aux = jnp.float32(0)
+        x = x + y
+        return x, (new_lcache, aux)
+
+    body = layer_fn
+    if cfg.remat:
+        body = jax.checkpoint(layer_fn, prevent_cse=False)
+
+    scan_in = {"p": params["layers"]}
+    if cache is not None:
+        scan_in["c"] = cache
+    x, (new_cache, aux) = jax.lax.scan(body, x, scan_in)
+
+    x = _norm(x, params["ln_f"])
+    aux_loss = jnp.mean(aux)
+    if return_hidden:
+        return x, aux_loss
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cfg.dtype))
+    if cache is not None:
+        return logits, new_cache
+    return logits, aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Train / serve steps
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    """Cross-entropy with sequence-chunked logits: the (B, Sc, V) logits
+    block is produced, reduced, and discarded one chunk at a time inside a
+    scan, so the full (B, S, V) tensor is never materialized."""
+    hidden, aux = forward(params, batch["tokens"], cfg, return_hidden=True)
+    labels = batch["labels"]
+    B, S = labels.shape
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    head = head.astype(cfg.dtype)
+
+    c = min(cfg.ce_chunk, S)
+    pad = (-S) % c
+    hidden_p = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    labels_p = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nchunk = (S + pad) // c
+    h_r = jnp.moveaxis(hidden_p.reshape(B, nchunk, c, -1), 1, 0)
+    l_r = jnp.moveaxis(labels_p.reshape(B, nchunk, c), 1, 0)
+
+    def chunk_step(carry, hl):
+        tot, cnt = carry
+        h, lab = hl
+        logits = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lab, 0)[..., None],
+                                   -1)[..., 0]
+        mask = (lab >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((logz - gold) * mask), cnt + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_step, (jnp.float32(0), jnp.float32(0)),
+                                 (h_r, l_r))
+    nll = tot / jnp.maximum(cnt, 1)
+    return nll + 0.01 * aux, nll
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> Pytree:
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def serve_step(params, cache, tokens, cache_lengths, cfg: TransformerConfig):
+    """One decode step: tokens (B, 1) new tokens; returns (next_token_logits,
+    new_cache)."""
+    logits, new_cache = forward(params, tokens, cfg, cache=cache,
+                                cache_lengths=cache_lengths)
+    return logits[:, -1], new_cache

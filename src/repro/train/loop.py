@@ -1,0 +1,119 @@
+"""Trainer: jit train step (+ optional microbatch gradient accumulation),
+checkpoint/restart fault tolerance, straggler watchdog, deterministic data
+replay. Works on any mesh (or none — single device) for any model exposing
+(init_params, loss_fn)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager
+from ..distributed.fault import FailureInjector, StepWatchdog
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    microbatch: int = 1          # gradient-accumulation splits
+    log_every: int = 10
+    async_ckpt: bool = True
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, params: Pytree,
+                 data_at: Callable[[int], dict], tcfg: TrainerConfig,
+                 opt_cfg: AdamWConfig = AdamWConfig(),
+                 failure_injector: Optional[FailureInjector] = None):
+        self.loss_fn = loss_fn
+        self.tcfg = tcfg
+        self.opt_cfg = opt_cfg
+        self.data_at = data_at
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.watchdog = StepWatchdog()
+        self.injector = failure_injector or FailureInjector()
+        self.params = params
+        self.opt_state = adamw_init(params)
+        self.metrics: list[dict] = []
+
+        mb = tcfg.microbatch
+
+        def step_fn(params, opt_state, batch):
+            if mb <= 1:
+                (loss, aux), grads = jax.value_and_grad(
+                    self.loss_fn, has_aux=True)(params, batch)
+            else:
+                def split(x):
+                    return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+                micro = jax.tree.map(split, batch)
+
+                def acc_step(carry, mb_batch):
+                    gsum, lsum, asum = carry
+                    (loss, aux), grads = jax.value_and_grad(
+                        self.loss_fn, has_aux=True)(params, mb_batch)
+                    gsum = jax.tree.map(jnp.add, gsum, grads)
+                    return (gsum, lsum + loss, asum + aux), None
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum, asum), _ = jax.lax.scan(
+                    acc_step, (zero, jnp.float32(0), jnp.float32(0)), micro)
+                grads = jax.tree.map(lambda g: g / mb, gsum)
+                loss, aux = lsum / mb, asum / mb
+            params, opt_state = adamw_update(grads, opt_state, params,
+                                             self.opt_cfg)
+            return params, opt_state, loss, aux
+
+        self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------ run
+    def run(self, resume: bool = True) -> dict:
+        start = 0
+        if resume and self.ckpt.latest_step() is not None:
+            state = {"params": self.params, "opt": self.opt_state}
+            restored, meta = self.ckpt.restore(state)
+            self.params = restored["params"]
+            self.opt_state = restored["opt"]
+            start = meta["step"] + 1
+
+        for step in range(start, self.tcfg.total_steps):
+            t0 = time.perf_counter()
+            self.injector.maybe_fail(step)
+            batch = self.data_at(step)
+            self.params, self.opt_state, loss, aux = self._jit_step(
+                self.params, self.opt_state, batch)
+            dt = time.perf_counter() - t0
+            straggler = self.watchdog.observe(step, dt)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps - 1:
+                self.metrics.append({"step": step, "loss": float(loss),
+                                     "aux": float(aux), "seconds": dt,
+                                     "straggler": straggler})
+            if self.tcfg.ckpt_every and (step + 1) % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step, {"params": self.params,
+                                      "opt": self.opt_state},
+                               blocking=not self.tcfg.async_ckpt)
+        self.ckpt.wait()
+        return {"final_step": self.tcfg.total_steps - 1,
+                "metrics": self.metrics,
+                "stragglers": self.watchdog.straggler_steps}
+
+    def run_with_restarts(self, max_restarts: int = 3) -> dict:
+        """Supervised run: injected/real failures trigger restore-and-replay
+        from the latest checkpoint (deterministic data makes replay exact)."""
+        restarts = 0
+        while True:
+            try:
+                return self.run(resume=True)
+            except RuntimeError:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise

@@ -1,0 +1,136 @@
+"""Distribution layer: multi-device GCDA, gradient compression, microbatch
+equivalence, sharding-rule divisibility logic. Uses host platform devices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analytics
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   compress_int8, compressed_psum,
+                                   decompress_int8)
+
+MULTI = jax.device_count() >= 2
+
+
+def test_int8_compression_roundtrip():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000) * 3, jnp.float32)
+    q, scale = compress_int8(g)
+    back = decompress_int8(q, scale)
+    assert q.dtype == jnp.int8
+    # error bounded by half a quantization step
+    assert float(jnp.abs(back - g).max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback, the accumulated compressed sum tracks the true
+    sum over steps (EF-SGD property)."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(512) * 0.01, jnp.float32)
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(20):
+        gc = g + err
+        q, s = compress_int8(gc)
+        approx = decompress_int8(q, s)
+        err = gc - approx
+        total = total + approx
+    true_total = g * 20
+    rel = float(jnp.abs(total - true_total).max() /
+                (jnp.abs(true_total).max() + 1e-9))
+    assert rel < 0.05
+
+
+def test_adamw_matches_reference_step():
+    rng = np.random.default_rng(2)
+    params = {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, weight_decay=0.0,
+                      grad_clip=1e9)
+    new_p, new_s = adamw_update(grads, state, params, cfg)
+    g = np.asarray(grads["w"])
+    m = 0.1 * g
+    v = 0.001 * g * g
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.999)
+    expect = np.asarray(params["w"]) - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expect, rtol=1e-3,
+                               atol=2e-6)  # f32 rsqrt vs np.sqrt
+
+
+def test_sharding_divisibility_rules():
+    from repro.distributed import sharding as shr
+    from repro.launch.mesh import make_local_mesh
+    from repro import configs
+    mesh = make_local_mesh(1, 1)
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    cfg = configs.get("qwen2_1_5b").config()     # 12 heads: NOT divisible
+    specs = shr.lm_param_specs(cfg, FakeMesh())
+    assert specs["layers"]["wq"] == jax.sharding.PartitionSpec(None, None, None)
+    assert specs["layers"]["w_in"][2] == "model"  # d_ff 8960 divisible
+    cfg2 = configs.get("stablelm_3b").config()   # 32 heads: divisible
+    specs2 = shr.lm_param_specs(cfg2, FakeMesh())
+    assert specs2["layers"]["wq"][2] == "model"
+
+
+def test_zero_spec_picks_divisible_dim():
+    from repro.distributed.sharding import zero_spec
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    class Shaped:
+        shape = (30, 3072, 128)
+
+    s = zero_spec(P(None, None, "model"), (30, 3072, 128), FakeMesh())
+    assert s == P(None, "data", "model")
+
+
+@pytest.mark.skipif(not MULTI, reason="needs >= 2 devices")
+def test_regression_distributed_matches_local():
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(jax.device_count(), 1)
+    rng = np.random.default_rng(3)
+    X = jnp.asarray(rng.standard_normal((256, 16)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 2, 256), jnp.float32)
+    w_d, loss_d = analytics.regression_distributed(X, y, mesh, iters=30)
+    w_l, loss_l = analytics.regression(X, y, iters=30, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(w_d), np.asarray(w_l),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_microbatch_equals_full_batch():
+    """Gradient accumulation is loss-equivalent to the full batch."""
+    import shutil
+    from repro.models.transformer import TransformerConfig, init_params, loss_fn
+    from repro.train.loop import Trainer, TrainerConfig
+    from repro.data.lm import TokenStream
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=32, vocab=64, dtype=jnp.float32)
+    stream = TokenStream(vocab=64, batch=8, seq=16)
+
+    def data_at(step):
+        b = stream.batch_at(step)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    results = {}
+    for mb in (1, 4):
+        shutil.rmtree(f"/tmp/mb{mb}", ignore_errors=True)
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        t = Trainer(lambda pp, b: loss_fn(pp, b, cfg), p, data_at,
+                    TrainerConfig(total_steps=5, ckpt_every=0,
+                                  ckpt_dir=f"/tmp/mb{mb}", microbatch=mb,
+                                  log_every=1))
+        r = t.run(resume=False)
+        results[mb] = [m["loss"] for m in r["metrics"]]
+    # same data, averaged grads: curves should be very close
+    np.testing.assert_allclose(results[1], results[4], rtol=2e-2)

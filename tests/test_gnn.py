@@ -1,0 +1,159 @@
+"""GNN models: equivariance properties (hypothesis over random rotations),
+gradient sanity, sampler static shapes, SO(3) machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gnn import equiformer_v2 as eqv2
+from repro.models.gnn import gatedgcn, mace, pna, so3
+from repro.models.gnn.common import GraphBatch
+
+
+def _random_graph3d(seed, n=16, e=48, n_species=8):
+    rng = np.random.default_rng(seed)
+    pos = rng.standard_normal((n, 3)) * 2
+    src = rng.integers(0, n, e)
+    dst = (src + rng.integers(1, n, e)) % n          # no self loops
+    species = rng.integers(0, n_species, n)
+    return pos, src, dst, species
+
+
+def _rotation(seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = rng.uniform(0, 2 * np.pi, 3)
+    return so3._rot_z(a) @ so3._rot_y(b) @ so3._rot_z(c)
+
+
+@given(st.integers(0, 1000), st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_mace_rotation_invariance(gseed, rseed):
+    pos, src, dst, species = _random_graph3d(gseed)
+    R = _rotation(rseed)
+    cfg = mace.MACEConfig(channels=8, n_species=8)
+    p = mace.init_params(jax.random.PRNGKey(0), cfg)
+    g1 = GraphBatch(src=jnp.asarray(src), dst=jnp.asarray(dst),
+                    pos=jnp.asarray(pos, jnp.float32),
+                    species=jnp.asarray(species))
+    g2 = GraphBatch(src=g1.src, dst=g1.dst,
+                    pos=jnp.asarray(pos @ R.T, jnp.float32),
+                    species=g1.species)
+    e1, e2 = mace.forward(p, g1, cfg), mace.forward(p, g2, cfg)
+    np.testing.assert_allclose(e1, e2, rtol=2e-3, atol=1e-4)
+
+
+@given(st.integers(0, 1000), st.integers(0, 1000))
+@settings(max_examples=5, deadline=None)
+def test_eqv2_rotation_invariance(gseed, rseed):
+    pos, src, dst, species = _random_graph3d(gseed)
+    R = _rotation(rseed)
+    cfg = eqv2.EquiformerV2Config(n_layers=2, channels=8, l_max=4, m_max=2,
+                                  n_heads=4, n_species=8)
+    p = eqv2.init_params(jax.random.PRNGKey(0), cfg)
+    g1 = GraphBatch(src=jnp.asarray(src), dst=jnp.asarray(dst),
+                    pos=jnp.asarray(pos, jnp.float32),
+                    species=jnp.asarray(species))
+    g2 = GraphBatch(src=g1.src, dst=g1.dst,
+                    pos=jnp.asarray(pos @ R.T, jnp.float32),
+                    species=g1.species)
+    e1, e2 = eqv2.forward(p, g1, cfg), eqv2.forward(p, g2, cfg)
+    np.testing.assert_allclose(e1, e2, rtol=2e-3, atol=1e-4)
+
+
+def test_mace_translation_invariance():
+    pos, src, dst, species = _random_graph3d(3)
+    cfg = mace.MACEConfig(channels=8, n_species=8)
+    p = mace.init_params(jax.random.PRNGKey(0), cfg)
+    g1 = GraphBatch(src=jnp.asarray(src), dst=jnp.asarray(dst),
+                    pos=jnp.asarray(pos, jnp.float32),
+                    species=jnp.asarray(species))
+    g2 = GraphBatch(src=g1.src, dst=g1.dst,
+                    pos=jnp.asarray(pos + np.array([1.5, -2.0, 0.3]),
+                                    jnp.float32), species=g1.species)
+    np.testing.assert_allclose(mace.forward(p, g1, cfg),
+                               mace.forward(p, g2, cfg), rtol=1e-4)
+
+
+@given(st.integers(1, 6), st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_wigner_rotates_sh(l, seed):
+    """D(R) Y(x) == Y(R x) for the batched jax Wigner path."""
+    rng = np.random.default_rng(seed)
+    a, b, c = rng.uniform(0, 2 * np.pi, 3)
+    R = so3._rot_z(a) @ so3._rot_y(b) @ so3._rot_z(c)
+    x = rng.standard_normal((6, 3))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    Y = np.asarray(so3.real_sph_harm(jnp.asarray(x), l))
+    Yr = np.asarray(so3.real_sph_harm(jnp.asarray(x @ R.T), l))
+    D = np.asarray(so3.wigner_from_rotation(
+        jnp.array([a]), jnp.array([b]), jnp.array([c]), l))[0]
+    np.testing.assert_allclose(Yr, Y @ D.T, atol=5e-5)
+
+
+@given(st.sampled_from([(1, 1, 0), (1, 1, 2), (2, 1, 1), (2, 2, 2)]),
+       st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_cg_equivariance(path, seed):
+    l1, l2, l3 = path
+    rng = np.random.default_rng(seed)
+    a, b, c = rng.uniform(0, 2 * np.pi, 3)
+    R = so3._rot_z(a) @ so3._rot_y(b) @ so3._rot_z(c)
+    C = so3.real_cg(l1, l2, l3)
+    D1, D2, D3 = (so3.wigner_np(l, R) for l in (l1, l2, l3))
+    va = rng.standard_normal(2 * l1 + 1)
+    vb = rng.standard_normal(2 * l2 + 1)
+    lhs = np.einsum("i,j,ijk->k", D1 @ va, D2 @ vb, C)
+    rhs = D3 @ np.einsum("i,j,ijk->k", va, vb, C)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-8)
+
+
+@pytest.mark.parametrize("mod,cfgmod", [(gatedgcn, "gatedgcn"), (pna, "pna")])
+def test_feature_gnn_train_step(mod, cfgmod):
+    from repro import configs
+    from repro.data.graphs import random_feature_graph
+    cfg = configs.get(cfgmod).smoke_config()
+    g, labels = random_feature_graph(60, 240, cfg.d_in, cfg.n_classes, seed=1)
+    p = mod.init_params(jax.random.PRNGKey(0), cfg)
+    loss0 = float(mod.loss_fn(p, g, labels, cfg))
+    grads = jax.grad(lambda pp: mod.loss_fn(pp, g, labels, cfg))(p)
+    p2 = jax.tree.map(lambda a, gr: a - 0.5 * gr, p, grads)
+    loss1 = float(mod.loss_fn(p2, g, labels, cfg))
+    assert np.isfinite(loss0) and loss1 < loss0
+
+
+def test_neighbor_sampler_static_shapes():
+    from repro.data.graphs import NeighborSampler
+    rng = np.random.default_rng(0)
+    n, e = 500, 4000
+    src, dst = rng.integers(0, n, e), rng.integers(0, n, e)
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    lab = rng.integers(0, 4, n)
+    s = NeighborSampler(n, src, dst, x, lab, fanouts=(4, 3), seed=0)
+    shapes = set()
+    for batch in range(3):
+        seeds = rng.integers(0, n, 8)
+        sub, slab = s.sample(seeds)
+        shapes.add((sub.n_nodes, sub.n_edges, slab.shape))
+        # sampled edges must exist in the base graph (valid ones)
+        em = np.asarray(sub.edge_mask) > 0
+    assert len(shapes) == 1, "sampler must produce static shapes"
+    nn = 8 * (1 + 4 + 12)
+    assert shapes.pop() == (nn, 8 * 4 + 8 * 4 * 3, (nn,))
+
+
+def test_sampled_edges_are_real():
+    from repro.data.graphs import NeighborSampler
+    rng = np.random.default_rng(1)
+    n, e = 200, 1000
+    src, dst = rng.integers(0, n, e), rng.integers(0, n, e)
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+    x = np.zeros((n, 4), np.float32)
+    lab = np.zeros(n, np.int64)
+    s = NeighborSampler(n, src, dst, x, lab, fanouts=(5,), seed=0)
+    seeds = rng.integers(0, n, 16)
+    l1 = s._sample_layer(seeds, 5)
+    for i, seed in enumerate(seeds):
+        for nbr in l1[i]:
+            if nbr >= 0:
+                assert (int(nbr), int(seed)) in edge_set

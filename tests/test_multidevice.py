@@ -1,0 +1,145 @@
+"""Multi-device behaviour of the beyond-paper distribution features, run in
+subprocesses with 8 host platform devices (XLA device count is fixed at
+process start, so these cannot run in the main pytest process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ENV = dict(os.environ,
+           XLA_FLAGS="--xla_force_host_platform_device_count=8",
+           PYTHONPATH="src")
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=ENV, capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_distributed_regression_matches_local():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import analytics
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(8, 1)
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.standard_normal((512, 24)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, 2, 512), jnp.float32)
+        w_d, _ = analytics.regression_distributed(X, y, mesh, iters=40)
+        w_l, _ = analytics.regression(X, y, iters=40, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(w_d), np.asarray(w_l),
+                                   rtol=5e-3, atol=5e-4)
+        print("OK distributed regression")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_seq_sharded_decode_matches_dense():
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.models.transformer import (TransformerConfig, init_params,
+                                              forward, init_cache, serve_step)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4,
+                                n_kv_heads=2, d_ff=96, vocab=128,
+                                dtype=jnp.float32, attn_impl="dense")
+        cfg_d = dataclasses.replace(cfg, mesh=mesh, mesh_dp=("data",),
+                                    kv_seq_shard="model")
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0, 128)
+        nxt = jax.random.randint(jax.random.PRNGKey(2), (4, 1), 0, 128)
+        with mesh:
+            cache = jax.tree.map(lambda c: jax.device_put(
+                c, NamedSharding(mesh, P(None, "data", None, "model", None))),
+                init_cache(cfg, 4, 32))
+            _, cache = forward(p, toks, cfg_d, cache=cache,
+                               cache_lengths=jnp.zeros(4, jnp.int32))
+            nl, _ = serve_step(p, cache, nxt, jnp.full(4, 24, jnp.int32), cfg_d)
+        cache2 = init_cache(cfg, 4, 32)
+        _, cache2 = forward(p, toks, cfg, cache=cache2,
+                            cache_lengths=jnp.zeros(4, jnp.int32))
+        nl2, _ = serve_step(p, cache2, nxt, jnp.full(4, 24, jnp.int32), cfg)
+        np.testing.assert_allclose(np.asarray(nl), np.asarray(nl2),
+                                   rtol=3e-4, atol=3e-4)
+        print("OK seq-sharded decode")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_shard_map_moe_matches_local():
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.models.transformer import TransformerConfig, init_params, forward
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = TransformerConfig(n_layers=2, d_model=32, n_heads=2,
+                                n_kv_heads=2, d_ff=16, vocab=64, n_experts=8,
+                                top_k=2, capacity_factor=4.0,
+                                dtype=jnp.float32, moe_groups=2)
+        cfg_sm = dataclasses.replace(cfg, mesh=mesh, mesh_dp=("data",),
+                                     moe_ep_axis="model", moe_impl="shard_map")
+        p = init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, 64)
+        l1, _ = forward(p, toks, cfg)
+        with mesh:
+            l2, _ = jax.jit(lambda pp, tt: forward(pp, tt, cfg_sm))(p, toks)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=5e-4, atol=5e-4)
+        print("OK shard_map moe")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_retrieval_matches_bruteforce():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import recsys
+        from repro import configs
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = configs.get("wide_deep").smoke_config()
+        p = recsys.init_params(jax.random.PRNGKey(0), cfg)
+        batch = recsys.random_batch(cfg, 2, seed=5)
+        cands = jnp.asarray(np.random.default_rng(6).standard_normal(
+            (512, cfg.tower_dim)), jnp.float32)
+        v0, i0 = recsys.retrieval_step(p, batch["dense"], batch["sparse"],
+                                       cands, cfg, top_k=16)
+        with mesh:
+            v1, i1 = jax.jit(lambda *a: recsys.retrieval_step_distributed(
+                *a, cfg, mesh, top_k=16))(p, batch["dense"], batch["sparse"],
+                                          cands.astype(jnp.bfloat16))
+        for b in range(2):
+            overlap = len(set(np.asarray(i0[b]).tolist())
+                          & set(np.asarray(i1[b]).tolist())) / 16
+            assert overlap >= 0.85, overlap
+        print("OK distributed retrieval")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_gcda_multiply_on_mesh():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import analytics
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(2, 4)
+        rng = np.random.default_rng(1)
+        X = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+        Y = jnp.asarray(rng.standard_normal((32, 48)), jnp.float32)
+        Z = analytics.multiply(X, Y, mesh=mesh)
+        np.testing.assert_allclose(np.asarray(Z), np.asarray(X) @ np.asarray(Y),
+                                   rtol=1e-4, atol=1e-4)
+        S = analytics.similarity(X, X, mesh=mesh)
+        assert S.shape == (64, 64)
+        print("OK gcda mesh ops")
+    """)
+    assert "OK" in out

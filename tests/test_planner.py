@@ -1,0 +1,140 @@
+"""Planner properties: every optimization mechanism is plan-equivalence
+preserving (optimized == unoptimized result multisets), pushdown decisions
+behave per Fig. 6, and the rewriting rules fire on the documented shapes."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import planner
+from repro.core.schema import JoinPred, Pattern, PatternVertex, Predicate, Query, chain_pattern
+from repro.core.storage import Database, Graph, Table
+from repro.data import m2bench
+
+
+def _rows(t: Table):
+    cols = sorted(t.columns)
+    out = []
+    for i in range(t.nrows):
+        row = []
+        for c in cols:
+            col = t.col(c)
+            v = col.codes[i] if hasattr(col, "codes") else np.asarray(col)[i]
+            row.append(int(v) if np.issubdtype(type(v), np.integer) else v)
+        out.append(tuple(row))
+    return sorted(out)
+
+
+@st.composite
+def random_db_and_query(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 99_999)))
+    n_p = draw(st.integers(3, 10))
+    n_t = draw(st.integers(2, 6))
+    n_e = draw(st.integers(2, 25))
+    n_c = draw(st.integers(2, 8))
+    db = Database()
+    persons = Table("P", {"pid": np.arange(n_p), "a": rng.integers(0, 3, n_p)})
+    tags = Table("T", {"tid": np.arange(n_t), "b": rng.integers(0, 3, n_t)})
+    edges = Table("E", {"svid": rng.integers(0, n_p, n_e),
+                        "tvid": rng.integers(0, n_t, n_e),
+                        "w": rng.integers(0, 10, n_e)})
+    db.add_graph(Graph("G", {"P": persons, "T": tags}, edges, "P", "T"))
+    db.add_table(Table("C", {"id": np.arange(n_c),
+                             "person_id": rng.integers(0, n_p, n_c),
+                             "v": rng.integers(0, 5, n_c)}))
+    pat = chain_pattern("G", ("p", "P", "E", "t", "T"))
+    where = []
+    if draw(st.booleans()):
+        where.append(Predicate("t.b", "==", draw(st.integers(0, 2))))
+    if draw(st.booleans()):
+        where.append(Predicate("p.a", "!=", draw(st.integers(0, 2))))
+    if draw(st.booleans()):
+        where.append(Predicate("e0.w", "range", 2, 8))
+    if draw(st.booleans()):
+        where.append(Predicate("C.v", "==", draw(st.integers(0, 4))))
+    q = Query(select=("C.id", "t.tid"), froms=("C",), match=pat,
+              joins=(JoinPred("C.person_id", "p.pid"),), where=tuple(where))
+    return db, q
+
+
+@given(random_db_and_query())
+@settings(max_examples=30, deadline=None)
+def test_optimizations_preserve_semantics(db_q):
+    db, q = db_q
+    p_opt = planner.plan(db, q, enable_opt=True)
+    p_raw = planner.plan(db, q, enable_opt=False,
+                         enable_pattern_pushdown=False)
+    assert _rows(planner.execute(db, p_opt)) == _rows(planner.execute(db, p_raw))
+
+
+def test_direction_rule_fig6():
+    """Fig. 6(a)/(b): traversal starts from the predicate side."""
+    db = m2bench.generate(sf=1)
+    g = db.graphs["Interested_in"]
+    from repro.core.pattern import plan_pattern
+    pat = chain_pattern("Interested_in", ("p", "Persons", "E", "t", "Tags"))
+    # predicate on target -> reverse
+    plan = plan_pattern(g, pat, {"t": [Predicate("t.content", "==", "food")]},
+                        projected={"p", "t"})
+    assert plan.reverse
+    assert "t" in plan.pushed
+    # predicate on source -> forward
+    plan = plan_pattern(g, pat, {"p": [Predicate("p.country", "==", "cn")]},
+                        projected={"p", "t"})
+    assert not plan.reverse
+    assert "p" in plan.pushed
+
+
+def test_inequality_deferred():
+    """Fig. 6 end-vertex rule: '!=' predicates are never pushed down."""
+    db = m2bench.generate(sf=1)
+    g = db.graphs["Interested_in"]
+    from repro.core.pattern import plan_pattern
+    pat = chain_pattern("Interested_in", ("p", "Persons", "E", "t", "Tags"))
+    # highly selective equality on the source fixes direction=forward, so t
+    # is the END vertex where the Fig. 6 rule applies
+    plan = plan_pattern(g, pat,
+                        {"p": [Predicate("p.pid", "==", 5)],
+                         "t": [Predicate("t.content", "!=", "food")]},
+                        projected={"p", "t"})
+    assert not plan.reverse
+    assert plan.deferred.get("t"), "end-vertex inequality must be deferred"
+
+
+def test_match_trimming_cases():
+    db = m2bench.generate(sf=1)
+    p1 = planner.plan(db, m2bench.q_vertex_scan())
+    assert p1.match_trim == "vertex_scan"
+    p2 = planner.plan(db, m2bench.q_edge_scan())
+    assert p2.match_trim == "edge_scan"
+    p3 = planner.plan(db, m2bench.q_g1())
+    assert p3.match_trim is None
+
+
+def test_projection_trimming():
+    db = m2bench.generate(sf=1)
+    q = m2bench.q_g1()
+    p = planner.plan(db, q)
+    # q_g1 projects t and joins on p: both kept, nothing else
+    assert p.graph_projection == {"p", "t"}
+
+
+def test_predicate_replication_across_join():
+    """Mechanism 1b: equality predicate on C.person_id replicates to p.pid."""
+    db = m2bench.generate(sf=1)
+    pat = chain_pattern("Interested_in", ("p", "Persons", "E", "t", "Tags"))
+    q = Query(select=("C.id", "t.tid"), froms=("C",), match=pat,
+              joins=(JoinPred("C.person_id", "p.pid"),),
+              where=(Predicate("C.person_id", "==", 5),))
+    # rename Customer table alias used above
+    db.tables["C"] = db.tables["Customer"]
+    p = planner.plan(db, q)
+    assert any("replicated" in n for n in p.notes)
+    assert any(pr.attr == "p.pid" for pr in
+               p.pattern_plan.pushed.get("p", []) +
+               p.pattern_plan.deferred.get("p", []))
+
+
+def test_join_pushdown_fires_on_selective_join():
+    db = m2bench.generate(sf=1)
+    p = planner.plan(db, m2bench.q_g4())
+    assert isinstance(p.semi_join_idx, set)  # decision is cost-based
+    assert any("join" in n for n in p.notes)

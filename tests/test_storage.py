@@ -1,0 +1,89 @@
+"""Storage invariants: doc shredding, ragged/dict columns, CSR topology
+(hypothesis property: CSR neighbor expansion == edge-list definition)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.storage import (CSR, Database, DictColumn, Graph,
+                                RaggedColumn, Table, build_csr,
+                                shred_documents)
+
+
+@given(st.integers(2, 30), st.integers(0, 60), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_csr_matches_edge_list(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    csr = build_csr(n, src, dst)
+    assert csr.n_vertices == n and csr.n_edges == e
+    # per-vertex neighbor multiset equals edge-list definition
+    for v in range(n):
+        got = sorted(csr.col_idx[csr.row_ptr[v]:csr.row_ptr[v + 1]])
+        expect = sorted(dst[src == v])
+        assert got == expect
+    # edge_id maps adjacency slots back to original edge rows
+    for v in range(n):
+        for slot in range(csr.row_ptr[v], csr.row_ptr[v + 1]):
+            eid = csr.edge_id[slot]
+            assert src[eid] == v and dst[eid] == csr.col_idx[slot]
+
+
+@given(st.integers(1, 20), st.integers(0, 40), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_frontier_expansion(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    csr = build_csr(n, src, dst)
+    frontier = rng.integers(0, n, min(n, 5))
+    s_rep, d, eid = csr.neighbors(frontier)
+    expect = []
+    for f in frontier:
+        expect += [(f, x) for x in sorted(dst[src == f])]
+    assert sorted(zip(s_rep, d)) == sorted(expect)
+
+
+def test_doc_shredding_paths_and_ragged():
+    docs = [
+        {"a": 1, "b": {"c": "x", "d": 2.5}, "tags": [1, 2]},
+        {"a": 2, "b": {"c": "y"}, "tags": []},
+        {"a": 3, "tags": [7]},
+    ]
+    t = shred_documents("D", docs)
+    assert set(t.columns) == {"a", "b.c", "b.d", "tags"}
+    assert np.array_equal(np.asarray(t.col("a")), [1, 2, 3])
+    assert isinstance(t.col("b.c"), DictColumn)
+    assert isinstance(t.col("tags"), RaggedColumn)
+    assert list(t.col("tags").row(0)) == [1, 2]
+    assert np.isnan(np.asarray(t.col("b.d"))[2])  # absent path -> NaN
+
+
+def test_ragged_predicate_any_semantics():
+    from repro.core.schema import Predicate
+    t = shred_documents("D", [{"xs": [1, 5]}, {"xs": [2]}, {"xs": []}])
+    mask = t.eval_predicate(Predicate("D.xs", ">=", 5))
+    assert list(mask) == [True, False, False]
+
+
+def test_dict_column_roundtrip():
+    c = DictColumn(values=["b", "a", "b", "c"])
+    assert list(c.decode(c.codes)) == ["b", "a", "b", "c"]
+    assert c.encode("zzz") == -1
+    taken = c.take(np.array([0, 3]))
+    assert list(taken.decode(taken.codes)) == ["b", "c"]
+
+
+def test_ragged_take():
+    r = RaggedColumn(lists=[[1, 2], [], [3, 4, 5]])
+    t = r.take(np.array([2, 0]))
+    assert list(t.row(0)) == [3, 4, 5]
+    assert list(t.row(1)) == [1, 2]
+
+
+def test_selectivity_estimates():
+    from repro.core.schema import Predicate
+    t = Table("T", {"x": np.arange(100)})
+    s_eq = t.stats("x").selectivity(Predicate("T.x", "==", 5))
+    s_range = t.stats("x").selectivity(Predicate("T.x", "range", 0, 49))
+    assert abs(s_eq - 0.01) < 1e-9
+    assert 0.4 < s_range < 0.6

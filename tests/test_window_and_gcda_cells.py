@@ -1,0 +1,63 @@
+"""Opt-in sliding-window attention (the sub-quadratic path documented for
+long_500k) and the bonus GCDA dry-run cells on a small mesh."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import TransformerConfig, init_params, forward
+
+
+def test_window_attention_chunked_equals_dense():
+    cfg = TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                            d_ff=96, vocab=128, dtype=jnp.float32,
+                            attn_window=8, q_chunk=16, kv_chunk=16)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 40), 0, 128)
+    l1, _ = forward(p, toks, cfg)
+    l2, _ = forward(p, toks, dataclasses.replace(cfg, attn_impl="dense"))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_window_actually_masks():
+    """Tokens beyond the window must not affect the last position."""
+    cfg = TransformerConfig(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                            d_ff=32, vocab=64, dtype=jnp.float32,
+                            attn_impl="dense", attn_window=4)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, 64)
+    toks2 = toks.at[:, :8].set(11)  # mutate tokens far outside the window
+    l1, _ = forward(p, toks, cfg)
+    l2, _ = forward(p, toks2, cfg)
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_gcda_cells_lower_on_small_mesh():
+    env = dict(os.environ, XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    code = textwrap.dedent("""
+        import jax
+        from repro.launch.mesh import make_local_mesh
+        from repro.launch.specs import build_cell
+        mesh = make_local_mesh(2, 4)
+        for shape in ("gcda_regression", "gcda_similarity", "gcda_multiply"):
+            with mesh:
+                cell = build_cell("gredo", shape, mesh)
+                c = jax.jit(cell.fn, in_shardings=cell.in_shardings).lower(
+                    *cell.args).compile()
+                assert c.cost_analysis() is not None
+        print("OK gcda cells")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout + r.stderr
