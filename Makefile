@@ -1,0 +1,24 @@
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test test-fast bench-smoke bench bench-update
+
+# tier-1 verification
+test:
+	python -m pytest -x -q
+
+# core engine + write-path tests only (quick inner loop)
+test-fast:
+	python -m pytest -x -q tests/test_storage.py tests/test_deltastore.py \
+		tests/test_planner.py tests/test_system.py tests/test_oracle_equivalence.py
+
+# small-size benchmark pass (CI smoke): paper suite fast mode + update suite
+bench-smoke:
+	python -m benchmarks.run --fast --sf 1
+	python -m benchmarks.run --suite update --fast
+
+bench:
+	python -m benchmarks.run --sf 1
+
+bench-update:
+	python -m benchmarks.run --suite update

@@ -2,6 +2,7 @@
 ``name,us_per_call,derived`` CSV rows plus a readable summary.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--sf 1] [--fast]
+                                               [--suite paper|update|all]
 """
 from __future__ import annotations
 
@@ -11,11 +12,22 @@ import os
 import sys
 
 
+def _update_suite(fast: bool) -> list[dict]:
+    from . import update_bench
+    rows = update_bench.run_suite(fast=fast)
+    update_bench.print_rows(rows)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sf", type=int, default=1)
     ap.add_argument("--fast", action="store_true",
-                    help="skip the scale-factor sweep")
+                    help="skip the scale-factor sweep / use smoke sizes")
+    ap.add_argument("--suite", choices=("paper", "update", "all"),
+                    default="paper",
+                    help="paper: GCDI/GCDA tables; update: write-path "
+                         "throughput (delta store vs full rebuild)")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -23,6 +35,16 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     all_rows: list[dict] = []
+
+    if args.suite in ("update", "all"):
+        all_rows += _update_suite(fast=args.fast)
+        if args.suite == "update":
+            os.makedirs("experiments", exist_ok=True)
+            with open("experiments/bench_results.json", "w") as f:
+                json.dump(all_rows, f, indent=1, default=str)
+            print("# full records -> experiments/bench_results.json",
+                  file=sys.stderr)
+            return
 
     # Figs. 7-8 + Fig. 10: GCDI ablation & graph workloads
     rows = m2.graph_workloads(sf=args.sf)

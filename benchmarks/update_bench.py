@@ -1,0 +1,184 @@
+"""Update-throughput benchmark: LSM delta writes vs. seed-style full rebuild.
+
+Two write paths over the same mutation stream:
+  * ``delta``   — the deltastore write path (O(batch) per write; compaction
+                  only when the policy triggers);
+  * ``rebuild`` — the seed behaviour: a full O(V+E) topology rebuild after
+                  every batch (simulated by forcing ``compact()`` per write).
+
+Also asserts the acceptance criterion directly: across the delta-path batch
+inserts the write-cost counters charge no compaction work and the per-batch
+write cost is batch-proportional (never O(V+E)).
+
+Usage: PYTHONPATH=src python -m benchmarks.update_bench [--fast]
+       (or via ``python -m benchmarks.run --suite update``)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import deltastore
+from repro.core.storage import Graph, Table
+
+
+def _mk_graph(n_vertices: int, n_edges: int, seed: int = 0,
+              cfg: deltastore.DeltaConfig | None = None) -> Graph:
+    rng = np.random.default_rng(seed)
+    verts = Table("V", {"vid": np.arange(n_vertices, dtype=np.int64),
+                        "attr": rng.integers(0, 100, n_vertices)})
+    edges = Table("E", {"svid": rng.integers(0, n_vertices, n_edges).astype(np.int64),
+                        "tvid": rng.integers(0, n_vertices, n_edges).astype(np.int64),
+                        "w": rng.uniform(0, 1, n_edges)})
+    return Graph("U", {"V": verts}, edges, "V", "V", delta_config=cfg)
+
+
+def _batches(n_vertices: int, batch: int, n_batches: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        out.append({"svid": rng.integers(0, n_vertices, batch).astype(np.int64),
+                    "tvid": rng.integers(0, n_vertices, batch).astype(np.int64),
+                    "w": rng.uniform(0, 1, batch)})
+    return out
+
+
+def _query_mix(g: Graph, rng: np.ndarray) -> int:
+    """A small read between writes: whole-frontier expansion over a vid
+    sample (the mixed-workload part of the benchmark)."""
+    _, dst, _ = g.expand(rng)
+    return len(dst)
+
+
+def update_throughput(n_vertices: int = 20_000, n_edges: int = 100_000,
+                      batch: int = 1_000, n_batches: int = 20,
+                      deletes_per_batch: int = 100) -> list[dict]:
+    """Returns CSV-able rows; raises if the delta write path did rebuild-scale
+    work (the acceptance assertion)."""
+    rows: list[dict] = []
+    mutations = _batches(n_vertices, batch, n_batches)
+    probe = np.random.default_rng(9).integers(0, n_vertices, 256)
+
+    # --- delta path -------------------------------------------------------
+    g = _mk_graph(n_vertices, n_edges)
+    deltastore.WRITE_COUNTERS.reset()
+    base_fwd = g.fwd
+    t0 = time.perf_counter()
+    for i, m in enumerate(mutations):
+        g.insert_edges(m)
+        if deletes_per_batch:
+            g.delete_edges(np.arange(i * deletes_per_batch,
+                                     (i + 1) * deletes_per_batch))
+    t_delta_writes = time.perf_counter() - t0
+    c = deltastore.WRITE_COUNTERS
+    total_rows = n_batches * (batch + deletes_per_batch)
+    # acceptance: no O(V+E) work on the hot path ---------------------------
+    assert c.compact_ops == 0 and c.compactions == 0, \
+        f"delta write path compacted unexpectedly: {c.compactions}"
+    assert g.fwd is base_fwd, "delta write path rebuilt the base CSR"
+    per_batch_ops = c.write_ops / (2 * n_batches)
+    assert per_batch_ops < 32 * batch, \
+        f"write cost {per_batch_ops:.0f} ops/batch is not batch-proportional"
+    t0 = time.perf_counter()
+    for _ in range(5):
+        _query_mix(g, probe)
+    t_delta_read = (time.perf_counter() - t0) / 5
+    t0 = time.perf_counter()
+    g.compact()
+    t_compact = time.perf_counter() - t0
+
+    # --- seed-style rebuild-per-write path --------------------------------
+    g2 = _mk_graph(n_vertices, n_edges)
+    t0 = time.perf_counter()
+    for i, m in enumerate(mutations):
+        g2.insert_edges(m)
+        g2.compact()                      # what the seed's _rebuild_topology did
+        if deletes_per_batch:
+            # compaction renumbers tids: the delta path's rows
+            # [i*k, (i+1)*k) are the first k live rows here
+            g2.delete_edges(np.arange(deletes_per_batch))
+            g2.compact()
+    t_rebuild_writes = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(5):
+        _query_mix(g2, probe)
+    t_rebuild_read = (time.perf_counter() - t0) / 5
+
+    # --- correctness spot check: both paths converge to the same graph ----
+    assert g.n_live_edges == g2.n_live_edges
+    d1 = np.sort(g.fwd.degrees())
+    d2 = np.sort(g2.fwd.degrees())
+    assert np.array_equal(d1, d2), "delta and rebuild paths diverged"
+
+    rows.append({
+        "table": "update_throughput", "n_vertices": n_vertices,
+        "n_edges": n_edges, "batch": batch, "n_batches": n_batches,
+        "delta_writes_s": t_delta_writes, "rebuild_writes_s": t_rebuild_writes,
+        "write_speedup": t_rebuild_writes / max(t_delta_writes, 1e-9),
+        "delta_rows_per_s": total_rows / max(t_delta_writes, 1e-9),
+        "rebuild_rows_per_s": total_rows / max(t_rebuild_writes, 1e-9),
+        "delta_read_s": t_delta_read, "rebuild_read_s": t_rebuild_read,
+        "compact_s": t_compact, "write_ops_per_batch": per_batch_ops,
+    })
+    return rows
+
+
+def compaction_amortization(n_vertices: int = 20_000, n_edges: int = 100_000,
+                            batch: int = 1_000, n_batches: int = 60) -> list[dict]:
+    """Delta path with the default auto-compaction policy: total cost stays
+    amortized even when the policy fires mid-stream."""
+    g = _mk_graph(n_vertices, n_edges)
+    deltastore.WRITE_COUNTERS.reset()
+    t0 = time.perf_counter()
+    for m in _batches(n_vertices, batch, n_batches, seed=2):
+        g.insert_edges(m)
+    elapsed = time.perf_counter() - t0
+    c = deltastore.WRITE_COUNTERS
+    return [{
+        "table": "compaction_amortization", "n_batches": n_batches,
+        "batch": batch, "total_s": elapsed,
+        "compactions": c.compactions,
+        "compact_ops": c.compact_ops, "write_ops": c.write_ops,
+        "rows_per_s": n_batches * batch / max(elapsed, 1e-9),
+    }]
+
+
+def run_suite(fast: bool = False) -> list[dict]:
+    if fast:
+        rows = update_throughput(n_vertices=4_000, n_edges=20_000,
+                                 batch=500, n_batches=6)
+        rows += compaction_amortization(n_vertices=4_000, n_edges=20_000,
+                                        batch=500, n_batches=15)
+        return rows
+    rows = update_throughput()
+    rows += compaction_amortization()
+    return rows
+
+
+def print_rows(rows: list[dict]) -> None:
+    """CSV rows for the update suite (shared with benchmarks.run)."""
+    for r in rows:
+        if r["table"] == "update_throughput":
+            print(f"update_delta_writes,{r['delta_writes_s']*1e6:.1f},"
+                  f"write_speedup={r['write_speedup']:.1f};"
+                  f"delta_rows_per_s={r['delta_rows_per_s']:.0f};"
+                  f"rebuild_rows_per_s={r['rebuild_rows_per_s']:.0f};"
+                  f"ops_per_batch={r['write_ops_per_batch']:.0f}")
+        else:
+            print(f"update_amortized,{r['total_s']*1e6:.1f},"
+                  f"compactions={r['compactions']};"
+                  f"rows_per_s={r['rows_per_s']:.0f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="small sizes (CI smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    print_rows(run_suite(fast=args.fast))
+
+
+if __name__ == "__main__":
+    main()

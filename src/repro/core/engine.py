@@ -33,6 +33,11 @@ class ExecStats:
     record_fetches: int
     cpu_ops: int
     interbuffer_hit: bool = False
+    # write-path observability: pending-delta state of the matched graph
+    # (segments / delta_edges / delta_vertices / tombstones) + lifetime
+    # compaction counters (see repro.core.deltastore)
+    delta: dict = dataclasses.field(default_factory=dict)
+    compactions: int = 0
 
 
 class GredoEngine:
@@ -64,7 +69,20 @@ class GredoEngine:
             plan_notes=notes, seconds=time.perf_counter() - t0,
             record_fetches=traversal.COUNTERS.record_fetches,
             cpu_ops=traversal.COUNTERS.cpu_ops)
+        if q.match is not None:
+            g = self.db.graphs[q.match.graph]
+            self.last_stats.delta = g.delta.stats()
+            self.last_stats.compactions = g.compactions
         return result
+
+    def _epoch_signature(self, q: Query) -> tuple:
+        """Write epochs of every collection the GCDI task reads — part of the
+        inter-buffer key, so any mutation of a source graph/table invalidates
+        dependent cached GCDA matrices."""
+        names = list(q.froms)
+        if q.match is not None:
+            names.append(q.match.graph)
+        return tuple((n, self.db.epoch_of(n)) for n in names)
 
     def _execute_single_engine(self, q: Query) -> Table:
         """GredoDB-S: translate the match into multi-way joins over the edge
@@ -91,7 +109,8 @@ class GredoEngine:
                 iters: int = 100):
         """Run a full GCDIA: GCDI -> G (matrix gen) -> A (parallel op)."""
         key = fingerprint(task.integration, task.analytics.op,
-                          task.analytics.inputs, self.mode)
+                          task.analytics.inputs, self.mode,
+                          self._epoch_signature(task.integration))
         cached = self.interbuffer.get(key)
         if cached is not None:
             if self.last_stats:
@@ -148,31 +167,31 @@ def _match_by_joins(g: Graph, pat: Pattern) -> Table:
         n = g.vertex_tables[pat.vertex(var).label].nrows
         traversal.COUNTERS.record_fetches += n
         return Table("join0", {var: np.arange(n)})
+    from .deltastore import expand_runs
+    live = g.live_edge_ids()  # tombstoned edges never join
     svid = np.asarray(g.edges.col("svid"))
     tvid = np.asarray(g.edges.col("tvid"))
+    if g.delta.n_tombstones:  # only copy-filter when something is dead
+        svid, tvid = svid[live], tvid[live]
     traversal.COUNTERS.record_fetches += 2 * len(svid) * max(len(edge_vars), 1)
 
-    cols = {chain_vars[0]: svid, edge_vars[0]: np.arange(g.edges.nrows),
-            chain_vars[1]: tvid}
+    cols = {chain_vars[0]: svid, edge_vars[0]: live, chain_vars[1]: tvid}
     cur = Table("join0", cols)
+    # the edge table is static across hops: sort once, probe per hop
+    order = np.argsort(svid, kind="stable")
+    svid_s = svid[order]
     for h in range(1, len(edge_vars)):
         # join cur.tail == edges.svid
-        order = np.argsort(svid, kind="stable")
-        svid_s = svid[order]
         tail = np.asarray(cur.col(chain_vars[h]))
         lo = np.searchsorted(svid_s, tail, "left")
         hi = np.searchsorted(svid_s, tail, "right")
-        counts = hi - lo
-        total = int(counts.sum())
+        l_rep, pos = expand_runs(lo, hi - lo)
+        total = len(pos)
         traversal.COUNTERS.cpu_ops += total
         traversal.COUNTERS.record_fetches += total
-        l_rep = np.repeat(np.arange(len(tail)), counts)
-        out_off = np.zeros(len(tail) + 1, dtype=np.int64)
-        np.cumsum(counts, out=out_off[1:])
-        pos = np.repeat(lo, counts) + (np.arange(total) - np.repeat(out_off[:-1], counts))
-        eids = order[pos]
+        rows = order[pos]
         ncols = {k: np.asarray(v)[l_rep] for k, v in cur.columns.items()}
-        ncols[edge_vars[h]] = eids
-        ncols[chain_vars[h + 1]] = tvid[eids]
+        ncols[edge_vars[h]] = live[rows]
+        ncols[chain_vars[h + 1]] = tvid[rows]
         cur = Table(f"join{h}", ncols)
     return cur

@@ -11,6 +11,7 @@ GCDI plans").
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from typing import Any, Optional
 
 import jax
@@ -24,38 +25,55 @@ def fingerprint(*parts: Any) -> str:
     return h.hexdigest()[:16]
 
 
+def _entry_bytes(mat: jax.Array) -> int:
+    return int(mat.size) * mat.dtype.itemsize
+
+
 class InterBuffer:
+    """LRU over an :class:`OrderedDict` (MRU at the end). Re-putting an
+    existing key replaces it in place (no duplicate order entries), and
+    eviction may drop every entry — a single matrix larger than the capacity
+    is not retained."""
+
     def __init__(self, capacity_bytes: int = 2 << 30):
         self.capacity_bytes = capacity_bytes
-        self._store: dict[str, jax.Array] = {}
-        self._order: list[str] = []
+        self._store: OrderedDict[str, jax.Array] = OrderedDict()
+        self._nbytes = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: str) -> Optional[jax.Array]:
-        if key in self._store:
+        mat = self._store.get(key)
+        if mat is not None:
             self.hits += 1
-            self._order.remove(key)
-            self._order.append(key)
-            return self._store[key]
+            self._store.move_to_end(key)
+            return mat
         self.misses += 1
         return None
 
     def put(self, key: str, mat: jax.Array) -> jax.Array:
         mat = jnp.asarray(mat)
+        old = self._store.pop(key, None)
+        if old is not None:
+            self._nbytes -= _entry_bytes(old)
         self._store[key] = mat
-        self._order.append(key)
+        self._nbytes += _entry_bytes(mat)
         self._evict()
         return mat
 
     def nbytes(self) -> int:
-        return sum(int(v.size) * v.dtype.itemsize for v in self._store.values())
+        return self._nbytes
+
+    def __len__(self):
+        return len(self._store)
 
     def _evict(self):
-        while self.nbytes() > self.capacity_bytes and len(self._order) > 1:
-            victim = self._order.pop(0)
-            del self._store[victim]
+        while self._nbytes > self.capacity_bytes and self._store:
+            _, victim = self._store.popitem(last=False)
+            self._nbytes -= _entry_bytes(victim)
+            self.evictions += 1
 
     def clear(self):
         self._store.clear()
-        self._order.clear()
+        self._nbytes = 0

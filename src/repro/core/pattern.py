@@ -167,14 +167,15 @@ def match(g: Graph, plan: PatternPlan) -> Table:
         hop_vars = hop_vars[::-1]
         hop_edges = hop_edges[::-1]
 
-    # vertex candidate member tables over nid space
+    # vertex candidate member tables over nid space (scatter through
+    # label_nids: with pending delta vertices a label's nid set is its base
+    # block plus appended delta nids, in merged-table row order)
     member: dict[str, Optional[np.ndarray]] = {}
     for v in chain_vars:
         m = _candidate_mask(g, pattern, v, plan.pushed.get(v, []))
         if m is not None:
-            lo, hi = g.label_range(pattern.vertex(v).label)
             full = np.zeros(g.n_vertices, dtype=bool)
-            full[lo:hi] = m
+            full[g.label_nids(pattern.vertex(v).label)] = m
             member[v] = full
         else:
             member[v] = None
@@ -183,13 +184,12 @@ def match(g: Graph, plan: PatternPlan) -> Table:
 
     # initial frontier (Line 9): candidates of the first hop var
     v0 = hop_vars[0]
-    lo, hi = g.label_range(pattern.vertex(v0).label)
+    v0_nids = g.label_nids(pattern.vertex(v0).label)
     if member[v0] is not None:
-        start_nids = np.nonzero(member[v0][lo:hi])[0] + lo
+        start_nids = v0_nids[member[v0][v0_nids]]
     else:
-        start_nids = np.arange(lo, hi)
+        start_nids = v0_nids
 
-    csr = g.rev if plan.reverse else g.fwd
     paths_v = [start_nids]          # per-var nid columns, in hop order
     paths_e: list[np.ndarray] = []  # per-edge tid columns
     n_paths = len(start_nids)
@@ -197,26 +197,19 @@ def match(g: Graph, plan: PatternPlan) -> Table:
 
     for hop, (evar, nvar) in enumerate(zip(hop_edges, hop_vars[1:])):
         frontier = paths_v[-1]
-        deg = csr.row_ptr[frontier + 1] - csr.row_ptr[frontier]
-        total = int(deg.sum())
+        # base ⊕ delta expansion (tombstoned edges already filtered)
+        row_rep, dst, eid = g.expand(frontier, reverse=plan.reverse)
+        total = len(dst)
         traversal.COUNTERS.cpu_ops += total + len(frontier)
-        row_rep = np.repeat(np.arange(len(frontier)), deg)
-        out_off = np.zeros(len(frontier) + 1, dtype=np.int64)
-        np.cumsum(deg, out=out_off[1:])
-        pos = np.repeat(csr.row_ptr[frontier], deg) + (
-            np.arange(total) - np.repeat(out_off[:-1], deg))
-        dst = csr.col_idx[pos].astype(np.int64)
-        eid = csr.edge_id[pos].astype(np.int64)
 
         keep = np.ones(total, dtype=bool)
         if member[nvar] is not None:
             keep &= member[nvar][dst]
             traversal.COUNTERS.cpu_ops += total
-        else:
-            # label constraint: dst must fall in nvar's label nid range
-            lo, hi = g.label_range(pattern.vertex(nvar).label)
-            if not (lo == 0 and hi == g.n_vertices):
-                keep &= (dst >= lo) & (dst < hi)
+        elif len(g.labels) > 1:
+            # label constraint: dst must carry nvar's label
+            keep &= (g.vertex_label_code[dst]
+                     == g.label_code_of(pattern.vertex(nvar).label))
         if edge_mask[evar] is not None:
             keep &= edge_mask[evar][eid]
             traversal.COUNTERS.cpu_ops += total
@@ -281,7 +274,7 @@ def shortest_path_lengths(g: Graph, src_nids: np.ndarray, dst_nids: np.ndarray,
         dist[s] = 0
         frontier = np.array([s])
         for h in range(1, max_hops + 1):
-            _, nxt, _ = g.fwd.neighbors(frontier)
+            _, nxt, _ = g.expand(frontier)
             nxt = np.unique(nxt)
             nxt = nxt[dist[nxt] < 0]
             if len(nxt) == 0:

@@ -61,6 +61,12 @@ class DevicePatternMatcher:
 
     def __init__(self, g: Graph, initial_capacity: int = 1 << 12,
                  max_capacity: int = 1 << 26):
+        if g.delta.has_pending():
+            # the device snapshot reads base CSRs only; compacting here
+            # would silently renumber edge tids under the caller's feet
+            raise ValueError(
+                f"graph {g.name!r} has pending delta writes; call "
+                "g.compact() before building a DevicePatternMatcher")
         self.g = g
         self.row_ptr = jnp.asarray(g.fwd.row_ptr)
         self.col_idx = jnp.asarray(g.fwd.col_idx)

@@ -148,14 +148,16 @@ def plan(db: Database, q: Query, enable_opt: bool = True,
             hops = len(pattern.edges)
             est_match = n_v * (g.avg_out_degree ** hops)
             # Plan A (Eq. 8): match on full candidates, then join
-            cost_a = cost_mod.cost_pattern(0, 0, n_v, g.fwd.n_edges, n_v, hops,
+            # (n_live_edges: base edges may drift from reality between
+            # delta-store compactions)
+            cost_a = cost_mod.cost_pattern(0, 0, n_v, g.n_live_edges, n_v, hops,
                                            g.avg_out_degree, est_match, 0)
             cost_a += cost_mod.cost_join(est_match, n_t)
             # Plan B (Eq. 9/10): semi-join shrinks candidates, then match
             shrink = min(1.0, n_t / max(n_v, 1))
             est_match_b = n_v * shrink * (g.avg_out_degree ** hops)
             cost_b = cost_mod.cost_join(n_v, n_t)
-            cost_b += cost_mod.cost_pattern(0, 0, int(n_v * shrink), g.fwd.n_edges,
+            cost_b += cost_mod.cost_pattern(0, 0, int(n_v * shrink), g.n_live_edges,
                                             n_v * shrink, hops, g.avg_out_degree,
                                             est_match_b, 0)
             if cost_b < cost_a:
@@ -397,7 +399,7 @@ def _trimmed_edge_scan(g: Graph, p: GCDIPlan) -> Table:
     """Match trimming case 2: v-e-v, edge-only predicates -> edge scan."""
     pattern = p.query.match
     evar = pattern.edges[0].var
-    mask = np.ones(g.edges.nrows, dtype=bool)
+    mask = g.live_edge_mask()  # fresh array; tombstoned edges never match
     for pred in p.pattern_plan.deferred.get(evar, []) if p.pattern_plan else []:
         mask &= g.edges.eval_predicate(pred)
     eids = np.nonzero(mask)[0]

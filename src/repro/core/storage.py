@@ -47,6 +47,30 @@ class DictColumn:
     def decode(self, codes) -> np.ndarray:
         return self.vocab[np.asarray(codes)]
 
+    def append(self, values) -> "DictColumn":
+        """Extend with new rows, growing the vocabulary incrementally: only
+        unseen values get new codes and only the new rows are encoded — no
+        decode + re-unique round trip over the existing column."""
+        values = list(values)
+        if self._index is None:
+            self._index = {v: i for i, v in enumerate(self.vocab)}
+        index = dict(self._index)
+        vocab_ext: list = []
+        new_codes = np.empty(len(values), dtype=np.int32)
+        n = len(self.vocab)
+        for i, v in enumerate(values):
+            c = index.get(v)
+            if c is None:
+                c = n + len(vocab_ext)
+                index[v] = c
+                vocab_ext.append(v)
+            new_codes[i] = c
+        vocab = (np.concatenate([self.vocab, np.asarray(vocab_ext, dtype=object)])
+                 if vocab_ext else self.vocab)
+        out = DictColumn(codes=np.concatenate([self.codes, new_codes]), vocab=vocab)
+        out._index = index
+        return out
+
     def take(self, idx) -> "DictColumn":
         return DictColumn(codes=self.codes[idx], vocab=self.vocab)
 
@@ -304,15 +328,11 @@ class CSR:
     def neighbors(self, frontier: np.ndarray):
         """Vectorized whole-frontier expansion (the CSR analogue of walking
         the paper's linked adjacency lists). Returns (src_rep, dst, eid)."""
+        from .deltastore import expand_runs
         frontier = np.asarray(frontier)
         deg = self.row_ptr[frontier + 1] - self.row_ptr[frontier]
-        total = int(deg.sum())
-        src_rep = np.repeat(frontier, deg)
-        starts = np.repeat(self.row_ptr[frontier], deg)
-        out_off = np.zeros(len(frontier) + 1, dtype=np.int64)
-        np.cumsum(deg, out=out_off[1:])
-        pos = starts + (np.arange(total) - np.repeat(out_off[:-1], deg))
-        return src_rep, self.col_idx[pos], self.edge_id[pos]
+        pos, slots = expand_runs(self.row_ptr[frontier], deg)
+        return frontier[pos], self.col_idx[slots], self.edge_id[slots]
 
 
 def build_csr(n_vertices: int, src: np.ndarray, dst: np.ndarray) -> CSR:
@@ -328,6 +348,36 @@ def build_csr(n_vertices: int, src: np.ndarray, dst: np.ndarray) -> CSR:
                edge_id=order.astype(np.int32))
 
 
+class _VertexTableView:
+    """Mapping view over a graph's vertex tables: ``g.vertex_tables[label]``
+    returns the base table when the label has no pending delta rows, else a
+    lazily merged (and cached) base ⊕ delta table."""
+
+    def __init__(self, g: "Graph"):
+        self._g = g
+
+    def __getitem__(self, label: str) -> Table:
+        return self._g.vertex_table(label)
+
+    def __iter__(self):
+        return iter(self._g.labels)
+
+    def __len__(self):
+        return len(self._g.labels)
+
+    def __contains__(self, label):
+        return label in self._g.labels
+
+    def keys(self):
+        return list(self._g.labels)
+
+    def items(self):
+        return [(lbl, self[lbl]) for lbl in self._g.labels]
+
+    def values(self):
+        return [self[lbl] for lbl in self._g.labels]
+
+
 class Graph:
     """Property graph G = (Omega, V, E, L) with uniform edge label.
 
@@ -339,92 +389,323 @@ class Graph:
         - nid_base[label] + vid == nid          (nidMap)
         - vertex_label_of[nid], vertex_vid_of[nid]  (vertexMap)
         - CSR.edge_id == edgeMap (edge tid per adjacency slot)
+
+    Mutations are O(batch): they land in ``self.delta`` (an LSM-style
+    write-ahead layer — see :mod:`repro.core.deltastore`), reads consult
+    base ⊕ delta (``expand``/lazy table views), and ``compact`` folds the
+    delta into a fresh base. ``epoch`` increments on every logical mutation
+    and keys the inter-buffer so cached GCDA results never go stale.
+    Between compactions, delta vertices occupy nids appended after the base
+    label blocks; compaction restores the contiguous label-block layout.
     """
 
     def __init__(self, name: str, vertex_tables: dict[str, Table], edges: Table,
-                 src_label: str, dst_label: str):
+                 src_label: str, dst_label: str,
+                 delta_config: Optional["deltastore.DeltaConfig"] = None):
+        from . import deltastore
         self.name = name
-        self.vertex_tables = dict(vertex_tables)
-        self.edges = edges
-        self.labels = list(vertex_tables)
         self.src_label = src_label
         self.dst_label = dst_label
+        self.epoch = 0
+        self.compactions = 0
+        self.last_compact_seconds = 0.0
+        self.delta_config = delta_config or deltastore.DeltaConfig()
+        self._set_base(dict(vertex_tables), edges)
+
+    def _set_base(self, vertex_tables: dict[str, Table], edges: Table) -> None:
+        """Install a fresh base snapshot (initial build and compaction).
+        The only O(V+E) path: builds CSRs, mappers, and resets the delta."""
+        from . import deltastore
+        self._base_vertex_tables = vertex_tables
+        self._base_edges = edges
+        self.labels = list(vertex_tables)
+        self._label_code = {lbl: i for i, lbl in enumerate(self.labels)}
 
         self.nid_base: dict[str, int] = {}
         base = 0
         for lbl in self.labels:
             self.nid_base[lbl] = base
             base += vertex_tables[lbl].nrows
-        self.n_vertices = base
+        self._n_base_vertices = base
+        self._base_label_rows = {lbl: vertex_tables[lbl].nrows for lbl in self.labels}
 
-        self.vertex_label_code = np.zeros(base, dtype=np.int8)
-        self.vertex_vid_of = np.zeros(base, dtype=np.int64)
+        vlc = np.zeros(base, dtype=np.int8)
+        vvo = np.zeros(base, dtype=np.int64)
         for i, lbl in enumerate(self.labels):
             b, n = self.nid_base[lbl], vertex_tables[lbl].nrows
-            self.vertex_label_code[b:b + n] = i
-            self.vertex_vid_of[b:b + n] = np.arange(n)
+            vlc[b:b + n] = i
+            vvo[b:b + n] = np.arange(n)
+        self._vlc = deltastore.Growable(vlc)
+        self._vvo = deltastore.Growable(vvo)
 
-        src_nid = self.nid_base[src_label] + np.asarray(edges.col("svid"))
-        dst_nid = self.nid_base[dst_label] + np.asarray(edges.col("tvid"))
-        self.src_nid, self.dst_nid = src_nid, dst_nid
+        src_nid = self.nid_base[self.src_label] + np.asarray(edges.col("svid"))
+        dst_nid = self.nid_base[self.dst_label] + np.asarray(edges.col("tvid"))
+        self._src_nid = deltastore.Growable(src_nid.astype(np.int64))
+        self._dst_nid = deltastore.Growable(dst_nid.astype(np.int64))
         self.fwd = build_csr(base, src_nid, dst_nid)
         self.rev = build_csr(base, dst_nid, src_nid)
+        self._n_base_edges = edges.nrows
+
+        self.delta = deltastore.GraphDelta(edges.nrows)
+        self._merged_edges: Optional[Table] = None
+        self._merged_vt: dict[str, Table] = {}
+        self.vertex_tables = _VertexTableView(self)
+
+    # ---- merged (base ⊕ delta) record views ----
+    def vertex_table(self, label: str) -> Table:
+        runs = self.delta.vertex_rows.get(label)
+        if not runs:
+            return self._base_vertex_tables[label]
+        if label not in self._merged_vt:
+            from . import deltastore
+            base = self._base_vertex_tables[label]
+            cols = {k: deltastore.concat_column(c, runs[k])
+                    for k, c in base.columns.items()}
+            self._merged_vt[label] = Table(base.name, cols)
+        return self._merged_vt[label]
+
+    @property
+    def edges(self) -> Table:
+        """Edge record table including pending delta rows (row index == edge
+        tid; tombstoned rows stay in place until compaction)."""
+        if not self.delta.n_new_edges:
+            return self._base_edges
+        if self._merged_edges is None:
+            from . import deltastore
+            cols = {k: deltastore.concat_column(c, self.delta.edge_rows[k])
+                    for k, c in self._base_edges.columns.items()}
+            self._merged_edges = Table(self._base_edges.name, cols)
+        return self._merged_edges
 
     # ---- mapping structures (paper §4.2) ----
-    def nid_of(self, label: str, vids: np.ndarray) -> np.ndarray:
-        return self.nid_base[label] + np.asarray(vids)
+    @property
+    def n_vertices(self) -> int:
+        return self._n_base_vertices + self.delta.n_new_vertices_total
+
+    @property
+    def vertex_label_code(self) -> np.ndarray:
+        return self._vlc.view()
+
+    @property
+    def vertex_vid_of(self) -> np.ndarray:
+        return self._vvo.view()
+
+    @property
+    def src_nid(self) -> np.ndarray:
+        return self._src_nid.view()
+
+    @property
+    def dst_nid(self) -> np.ndarray:
+        return self._dst_nid.view()
+
+    def nid_of(self, label: str, vids) -> np.ndarray:
+        vids = np.asarray(vids)
+        base_rows = self._base_label_rows[label]
+        if self.delta.n_new_vertices.get(label, 0) == 0 or vids.size == 0 \
+                or int(np.max(vids)) < base_rows:
+            return self.nid_base[label] + vids
+        flat = np.atleast_1d(vids).astype(np.int64)
+        out = np.empty(len(flat), dtype=np.int64)
+        in_base = flat < base_rows
+        out[in_base] = self.nid_base[label] + flat[in_base]
+        new_nids = self.delta.label_new_nids(label)
+        out[~in_base] = new_nids[flat[~in_base] - base_rows]
+        return out.reshape(vids.shape) if vids.ndim else out[0]
 
     def vids_of(self, nids: np.ndarray) -> np.ndarray:
         return self.vertex_vid_of[np.asarray(nids)]
 
     def label_range(self, label: str) -> tuple[int, int]:
+        """Contiguous nid range of the label's BASE block (delta vertices of
+        the label, if any, live past ``_n_base_vertices`` — use
+        ``label_nids`` for the full set)."""
         b = self.nid_base[label]
-        return b, b + self.vertex_tables[label].nrows
+        return b, b + self._base_label_rows[label]
+
+    def label_nids(self, label: str) -> np.ndarray:
+        """All nids of a label, base block first then delta vertices in
+        insertion order (matches the merged vertex table's row order)."""
+        lo, hi = self.label_range(label)
+        new = self.delta.label_new_nids(label)
+        base = np.arange(lo, hi, dtype=np.int64)
+        return base if new is None else np.concatenate([base, new])
+
+    def label_code_of(self, label: str) -> int:
+        return self._label_code[label]
+
+    @property
+    def n_live_edges(self) -> int:
+        return self._n_base_edges + self.delta.n_new_edges - self.delta.n_tombstones
+
+    def live_edge_mask(self) -> np.ndarray:
+        """Boolean mask over the edge-tid space (== ``edges.nrows``) that is
+        False for tombstoned edges."""
+        return self.delta.live_edge_mask()
+
+    def live_edge_ids(self) -> np.ndarray:
+        if not self.delta.n_tombstones:
+            return np.arange(self._n_base_edges + self.delta.n_new_edges)
+        return np.nonzero(self.delta.live_edge_mask())[0]
 
     @property
     def avg_out_degree(self) -> float:
-        return self.fwd.n_edges / max(self.n_vertices, 1)
+        return self.n_live_edges / max(self.n_vertices, 1)
 
-    # ---- updates (paper §4.4; staged insertion protocol) ----
+    # ---- base ⊕ delta topology reads ----
+    def expand(self, frontier: np.ndarray, reverse: bool = False
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Whole-frontier adjacency expansion over base CSR ⊕ delta segments
+        minus tombstones. Returns (pos, dst_nid, edge_tid) with ``pos``
+        indexing into ``frontier``; output is grouped by frontier position."""
+        frontier = np.asarray(frontier, dtype=np.int64)
+        csr = self.rev if reverse else self.fwd
+        d = self.delta
+        delta_free = not d.segments and not d.n_tombstones
+        in_base = frontier < self._n_base_vertices
+        if delta_free and (frontier.size == 0 or in_base.all()):
+            return _csr_expand(csr, frontier)
+
+        parts = []
+        if in_base.all():
+            parts.append(_csr_expand(csr, frontier))
+        else:
+            idx = np.nonzero(in_base)[0]
+            pos, dst, eid = _csr_expand(csr, frontier[idx])
+            parts.append((idx[pos], dst, eid))
+        for seg in d.segments:
+            parts.append(seg.neighbors(frontier, reverse=reverse))
+        if len(parts) == 1:
+            pos, dst, eid = parts[0]  # already grouped by frontier position
+            if d.n_tombstones:
+                keep = d.live_mask_for(eid)
+                pos, dst, eid = pos[keep], dst[keep], eid[keep]
+            return pos, dst, eid
+        pos = np.concatenate([p[0] for p in parts])
+        dst = np.concatenate([p[1] for p in parts])
+        eid = np.concatenate([p[2] for p in parts])
+        if d.n_tombstones:
+            keep = d.live_mask_for(eid)
+            pos, dst, eid = pos[keep], dst[keep], eid[keep]
+        order = np.argsort(pos, kind="stable")
+        return pos[order], dst[order], eid[order]
+
+    # ---- updates (paper §4.4 staged insertion, LSM-buffered) ----
     def insert_vertices(self, label: str, rows: dict[str, np.ndarray]) -> None:
-        """Vertex-only batch insertion: records first (RecordAM), then fresh
-        nids; adjacency untouched (paper's vertex-only fast path)."""
-        tbl = self.vertex_tables[label]
-        ncols = {}
-        for k, c in tbl.columns.items():
-            new = rows[k]
-            if isinstance(c, DictColumn):
-                merged = np.concatenate([c.vocab[c.codes], np.asarray(new, dtype=object)])
-                ncols[k] = DictColumn(values=merged)
-            else:
-                ncols[k] = np.concatenate([np.asarray(c), np.asarray(new)])
-        self.vertex_tables[label] = Table(tbl.name, ncols)
-        self._rebuild_topology()
+        """Vertex-only batch insertion: records buffered (RecordAM deferred
+        to the lazy merge), fresh nids appended after the base nid space;
+        adjacency untouched (the paper's vertex-only fast path). O(batch)."""
+        from .deltastore import WRITE_COUNTERS
+        base = self._base_vertex_tables[label]
+        cols = {k: np.asarray(rows[k]) if not isinstance(base.columns[k], RaggedColumn)
+                else rows[k] for k in base.columns}
+        lens = {len(v) for v in cols.values()}
+        if len(lens) != 1:
+            raise ValueError(f"ragged insert batch for {label}: "
+                             f"{ {k: len(v) for k, v in cols.items()} }")
+        n_new = lens.pop()
+        if n_new == 0:
+            return
+        start = self._n_base_vertices + self.delta.n_new_vertices_total
+        nids = np.arange(start, start + n_new, dtype=np.int64)
+        vid0 = self._base_label_rows[label] + self.delta.n_new_vertices.get(label, 0)
+        self.delta.buffer_vertices(label, cols, nids)
+        self._vlc.append(np.full(n_new, self._label_code[label], dtype=np.int8))
+        self._vvo.append(np.arange(vid0, vid0 + n_new, dtype=np.int64))
+        self._merged_vt.pop(label, None)
+        self.epoch += 1
+        WRITE_COUNTERS.write_batches += 1
+        WRITE_COUNTERS.write_rows += n_new
+        WRITE_COUNTERS.write_ops += n_new
+        self._maybe_compact()
 
     def insert_edges(self, rows: dict[str, np.ndarray]) -> None:
-        ncols = {}
-        for k, c in self.edges.columns.items():
-            new = rows[k]
-            if isinstance(c, DictColumn):
-                merged = np.concatenate([c.vocab[c.codes], np.asarray(new, dtype=object)])
-                ncols[k] = DictColumn(values=merged)
-            else:
-                ncols[k] = np.concatenate([np.asarray(c), np.asarray(new)])
-        self.edges = Table(self.edges.name, ncols)
-        self._rebuild_topology()
+        """Edge batch insertion: records buffered, topology absorbed as one
+        immutable delta-CSR segment (forward + reverse). O(batch log batch)."""
+        from . import deltastore
+        cols = {k: rows[k] for k in self._base_edges.columns}
+        svid = np.asarray(cols["svid"])
+        tvid = np.asarray(cols["tvid"])
+        n_new = len(svid)
+        if n_new == 0:
+            return
+        src_nid = np.atleast_1d(self.nid_of(self.src_label, svid)).astype(np.int64)
+        dst_nid = np.atleast_1d(self.nid_of(self.dst_label, tvid)).astype(np.int64)
+        eid0 = self._n_base_edges + self.delta.n_new_edges
+        eids = np.arange(eid0, eid0 + n_new, dtype=np.int64)
+        seg = deltastore.EdgeSegment(src_nid, dst_nid, eids)
+        self.delta.buffer_edges(cols, seg)
+        self._src_nid.append(src_nid)
+        self._dst_nid.append(dst_nid)
+        self._merged_edges = None
+        self.epoch += 1
+        c = deltastore.WRITE_COUNTERS
+        c.write_batches += 1
+        c.write_rows += n_new
+        c.write_ops += n_new * max(int(np.ceil(np.log2(max(n_new, 2)))), 1)
+        self._maybe_compact()
 
     def delete_edges(self, edge_tids: np.ndarray) -> None:
-        keep = np.ones(self.edges.nrows, dtype=bool)
-        keep[np.asarray(edge_tids)] = False
-        self.edges = self.edges.take(np.nonzero(keep)[0])
-        self._rebuild_topology()
+        """Edge deletion: tombstone bitmap only — edge tids stay stable and
+        the record rows remain in place until compaction. O(batch)."""
+        from .deltastore import WRITE_COUNTERS
+        tids = np.asarray(edge_tids)
+        if len(tids) == 0:
+            return
+        fresh = self.delta.tombstone_edges(tids)
+        if fresh == 0:
+            return  # idempotent re-delete: content (and epoch) unchanged
+        self.epoch += 1
+        WRITE_COUNTERS.write_batches += 1
+        WRITE_COUNTERS.write_rows += fresh
+        WRITE_COUNTERS.write_ops += len(tids)
+        self._maybe_compact()
+
+    # ---- compaction (the amortized rebuild) ----
+    def _maybe_compact(self) -> None:
+        from . import deltastore
+        if deltastore.should_compact(self.delta_config, self.delta,
+                                     self._n_base_edges):
+            self.compact()
+
+    def compact(self) -> None:
+        """Fold the delta into a fresh base: merge record runs, drop
+        tombstoned edge rows (renumbering edge tids), rebuild CSRs and
+        mappers. Restores contiguous label-block nid layout. Pure merges
+        leave the epoch alone (content and tids unchanged), but dropping
+        tombstones renumbers edge tids, which IS observable through
+        tid-projecting queries — so that case advances the epoch."""
+        import time
+        from .deltastore import WRITE_COUNTERS
+        if not self.delta.has_pending():
+            return
+        t0 = time.perf_counter()
+        renumbered = self.delta.n_tombstones > 0
+        vt = {lbl: self.vertex_table(lbl) for lbl in self.labels}
+        edges = self.edges
+        if renumbered:
+            edges = edges.take(np.nonzero(self.delta.live_edge_mask())[0])
+        self._set_base(vt, edges)
+        if renumbered:
+            self.epoch += 1
+        self.compactions += 1
+        self.last_compact_seconds = time.perf_counter() - t0
+        WRITE_COUNTERS.compactions += 1
+        WRITE_COUNTERS.compact_ops += self._n_base_vertices + self._n_base_edges
 
     def _rebuild_topology(self):
-        # Incremental CSR append is possible; for clarity we rebuild — the
-        # mappers stay consistent by construction (the paper's consistency
-        # requirement between record and topology storage).
-        self.__init__(self.name, self.vertex_tables, self.edges,
-                      self.src_label, self.dst_label)
+        """Deprecated alias kept for API compatibility: the full rebuild now
+        only happens inside ``compact``."""
+        self.compact()
+
+
+def _csr_expand(csr: CSR, frontier: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """CSR.neighbors variant returning frontier *positions* instead of
+    repeated source nids (callers join path prefixes through positions)."""
+    from .deltastore import expand_runs
+    deg = csr.row_ptr[frontier + 1] - csr.row_ptr[frontier]
+    pos, slots = expand_runs(csr.row_ptr[frontier], deg)
+    return pos, csr.col_idx[slots].astype(np.int64), csr.edge_id[slots].astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -439,15 +720,34 @@ class Database:
     def __init__(self):
         self.tables: dict[str, Table] = {}
         self.graphs: dict[str, Graph] = {}
+        self._table_epochs: dict[str, int] = {}
 
     def add_table(self, t: Table):
+        if t.name in self.tables:
+            self._table_epochs[t.name] = self._table_epochs.get(t.name, 0) + 1
         self.tables[t.name] = t
 
     def add_documents(self, name: str, docs: list[dict]):
-        self.tables[name] = shred_documents(name, docs)
+        self.add_table(shred_documents(name, docs))
 
     def add_graph(self, g: Graph):
+        if g.name in self.graphs:
+            # replacing a graph resets its own epoch counter: carry the old
+            # lineage forward so cached GCDA results are invalidated
+            self._table_epochs[g.name] = self.epoch_of(g.name) + 1
         self.graphs[g.name] = g
+
+    def touch_table(self, name: str) -> None:
+        """Signal an in-place mutation of a relational/document collection
+        (bumps its epoch so dependent cached GCDA results are invalidated)."""
+        self._table_epochs[name] = self._table_epochs.get(name, 0) + 1
+
+    def epoch_of(self, name: str) -> int:
+        """Write epoch of a collection. Graphs track their own epoch; the
+        epoch-base entry accounts for whole-graph replacement."""
+        if name in self.graphs:
+            return self._table_epochs.get(name, 0) + self.graphs[name].epoch
+        return self._table_epochs.get(name, 0)
 
     def collection(self, name: str):
         if name in self.tables:

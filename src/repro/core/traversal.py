@@ -69,8 +69,9 @@ def nid_to_nid(g: Graph, nids: np.ndarray, member: Optional[np.ndarray] = None,
     gather ``member[dst]`` instead of a per-pair set probe, which removes the
     O(|O1|·|O2|) blowup the paper warns about (§5.1) by construction.
     """
-    csr = g.rev if reverse else g.fwd
-    src_rep, dst, eid = csr.neighbors(np.asarray(nids))
+    nids = np.asarray(nids)
+    pos, dst, eid = g.expand(nids, reverse=reverse)
+    src_rep = nids[pos]
     COUNTERS.cpu_ops += len(dst) + len(nids)
     if member is not None:
         keep = member[dst]
@@ -86,8 +87,9 @@ def nid_to_e(g: Graph, nids: np.ndarray, edge_mask: Optional[np.ndarray] = None,
     """Adjacency expansion emitting edge tids (edgeMap + tid-based RecordAM).
     ``edge_mask`` is a boolean table over edge tids (predicate already
     evaluated columnar-side)."""
-    csr = g.rev if reverse else g.fwd
-    src_rep, dst, eid = csr.neighbors(np.asarray(nids))
+    nids = np.asarray(nids)
+    pos, dst, eid = g.expand(nids, reverse=reverse)
+    src_rep = nids[pos]
     COUNTERS.cpu_ops += len(dst) + len(nids)
     COUNTERS.record_fetches += len(eid)
     if edge_mask is not None:

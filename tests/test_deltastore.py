@@ -1,0 +1,445 @@
+"""Delta-store write path: base ⊕ delta reads must be indistinguishable from
+a from-scratch rebuilt graph (pattern.match, traversal, k-hop joins, shortest
+paths), writes must stay off the O(V+E) rebuild path, and the epoch-keyed
+inter-buffer must recompute GCDA results after any source mutation."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import deltastore
+from repro.core.engine import GredoEngine, _match_by_joins
+from repro.core.interbuffer import InterBuffer
+from repro.core.pattern import match, plan_pattern, shortest_path_lengths
+from repro.core.schema import (AnalyticsTask, GCDIATask, Predicate, Query,
+                               chain_pattern)
+from repro.core.storage import (Database, DictColumn, Graph, RaggedColumn,
+                                Table, build_csr)
+from repro.core import traversal
+
+
+# ---------------------------------------------------------------------------
+# Helpers: build a graph, mutate it, and rebuild an oracle from scratch
+# ---------------------------------------------------------------------------
+
+
+def _mk_tables(seed=0, n_a=15, n_b=8, n_e=60):
+    rng = np.random.default_rng(seed)
+    A = {"attr": rng.integers(0, 3, n_a),
+         "tag": [("x", "y", "z")[i % 3] for i in range(n_a)]}
+    B = {"attr": rng.integers(0, 3, n_b)}
+    E = {"svid": rng.integers(0, n_a, n_e).astype(np.int64),
+         "tvid": rng.integers(0, n_b, n_e).astype(np.int64),
+         "w": rng.integers(0, 10, n_e).astype(np.int64)}
+    return A, B, E
+
+
+def _graph_from(A, B, E, cfg=None):
+    return Graph("G",
+                 {"A": Table("A", {"attr": np.asarray(A["attr"]),
+                                   "tag": DictColumn(values=list(A["tag"]))}),
+                  "B": Table("B", {"attr": np.asarray(B["attr"])})},
+                 Table("E", {k: np.asarray(v) for k, v in E.items()}),
+                 "A", "B", delta_config=cfg)
+
+
+def _no_compact():
+    return deltastore.DeltaConfig(auto_compact=False)
+
+
+def _match_rows(g, phi=None, projected=()):
+    """Sorted multiset of (src vid, dst vid, edge w) bindings — edge tids are
+    deliberately excluded because compaction renumbers them."""
+    pattern = chain_pattern("G", ("x", "A", "E", "y", "B"))
+    plan = plan_pattern(g, pattern, {k: list(v) for k, v in (phi or {}).items()},
+                        projected=set(projected))
+    rel = match(g, plan)
+    w = np.asarray(g.edges.col("w"))[np.asarray(rel.col("e0"))]
+    rows = list(zip(np.asarray(rel.col("x")).tolist(),
+                    np.asarray(rel.col("y")).tolist(), w.tolist()))
+    return sorted(rows)
+
+
+def _apply_script(g, script):
+    """Mutate ``g`` through the delta write path, and return the equivalent
+    (A, B, E, live) state for building an oracle graph from scratch."""
+    A = {"attr": list(np.asarray(g.vertex_tables["A"].col("attr"))),
+         "tag": list(g.vertex_tables["A"].col("tag").decode(
+             g.vertex_tables["A"].col("tag").codes))}
+    B = {"attr": list(np.asarray(g.vertex_tables["B"].col("attr")))}
+    E = {k: list(np.asarray(g.edges.col(k))) for k in ("svid", "tvid", "w")}
+    dead: set = set()
+    for op, payload in script:
+        if op == "ins_e":
+            g.insert_edges(payload)
+            for k in E:
+                E[k].extend(np.asarray(payload[k]).tolist())
+        elif op == "del_e":
+            g.delete_edges(payload)
+            dead.update(np.asarray(payload).tolist())
+        elif op == "ins_vA":
+            g.insert_vertices("A", payload)
+            A["attr"].extend(np.asarray(payload["attr"]).tolist())
+            A["tag"].extend(list(payload["tag"]))
+        elif op == "ins_vB":
+            g.insert_vertices("B", payload)
+            B["attr"].extend(np.asarray(payload["attr"]).tolist())
+        else:
+            raise ValueError(op)
+    live = [i for i in range(len(E["svid"])) if i not in dead]
+    E_live = {k: np.asarray(v)[live] for k, v in E.items()}
+    return A, B, E_live
+
+
+SCRIPT = [
+    ("ins_e", {"svid": np.array([0, 1, 2, 14]), "tvid": np.array([7, 0, 3, 1]),
+               "w": np.array([11, 12, 13, 14])}),
+    ("del_e", np.array([0, 5, 9, 61])),       # base edges + a delta edge
+    ("ins_vA", {"attr": np.array([1, 2]), "tag": ["q", "x"]}),
+    ("ins_vB", {"attr": np.array([0])}),
+    ("ins_e", {"svid": np.array([15, 16, 3]), "tvid": np.array([8, 8, 2]),
+               "w": np.array([20, 21, 22])}),  # edges touching delta vertices
+    ("del_e", np.array([64])),                 # delete an edge of a delta vertex
+]
+
+
+@pytest.fixture()
+def mutated_and_oracle():
+    A, B, E = _mk_tables()
+    g = _graph_from(A, B, E, cfg=_no_compact())
+    A2, B2, E2 = _apply_script(g, SCRIPT)
+    oracle = _graph_from(A2, B2, E2)
+    assert g.delta.has_pending()  # the point: reads run over base ⊕ delta
+    return g, oracle
+
+
+# ---------------------------------------------------------------------------
+# Read-path equivalence: delta overlay == from-scratch rebuild
+# ---------------------------------------------------------------------------
+
+
+def test_pattern_match_equals_rebuild(mutated_and_oracle):
+    g, oracle = mutated_and_oracle
+    assert _match_rows(g) == _match_rows(oracle)
+
+
+def test_pattern_match_with_predicates_equals_rebuild(mutated_and_oracle):
+    g, oracle = mutated_and_oracle
+    phi = {"x": [Predicate("x.attr", "==", 1)],
+           "e0": [Predicate("e0.w", "<=", 12)]}
+    assert _match_rows(g, phi) == _match_rows(oracle, phi)
+    phi = {"y": [Predicate("y.attr", "!=", 0)],
+           "x": [Predicate("x.tag", "==", "q")]}  # delta-extended vocabulary
+    assert _match_rows(g, phi) == _match_rows(oracle, phi)
+
+
+def _lv(gr, nids):
+    """nids -> comparable (label_code, vid) pairs: the delta graph appends
+    new vertices after the base nid space while a rebuilt oracle lays labels
+    out contiguously, so raw nids are not comparable across the two."""
+    nids = np.asarray(nids)
+    return list(zip(gr.vertex_label_code[nids].tolist(),
+                    gr.vertex_vid_of[nids].tolist()))
+
+
+def test_traversal_equals_rebuild(mutated_and_oracle):
+    g, oracle = mutated_and_oracle
+    for reverse in (False, True):
+        s1, d1, _ = traversal.nid_to_nid(g, np.arange(g.n_vertices),
+                                         reverse=reverse)
+        s2, d2, _ = traversal.nid_to_nid(oracle, np.arange(oracle.n_vertices),
+                                         reverse=reverse)
+        assert sorted(zip(_lv(g, s1), _lv(g, d1))) == \
+            sorted(zip(_lv(oracle, s2), _lv(oracle, d2)))
+
+
+def test_khop_joins_equal_rebuild():
+    """Two-hop homogeneous k-hop joins (the GredoDB-S TBS path) agree."""
+    rng = np.random.default_rng(3)
+    n, e = 12, 40
+    E = {"svid": rng.integers(0, n, e).astype(np.int64),
+         "tvid": rng.integers(0, n, e).astype(np.int64),
+         "w": rng.integers(0, 5, e).astype(np.int64)}
+    mk = lambda Ed, cfg=None: Graph(
+        "H", {"A": Table("A", {"attr": np.zeros(n, np.int64)})},
+        Table("E", {k: np.asarray(v) for k, v in Ed.items()}), "A", "A",
+        delta_config=cfg)
+    g = mk(E, _no_compact())
+    g.insert_edges({"svid": np.array([0, 1]), "tvid": np.array([2, 0]),
+                    "w": np.array([9, 9])})
+    g.delete_edges(np.array([3, 4, 40]))
+    live = [i for i in range(e) if i not in (3, 4)] + [41]
+    full = {k: np.append(np.asarray(E[k]), {"svid": [0, 1], "tvid": [2, 0],
+                                            "w": [9, 9]}[k]) for k in E}
+    oracle = mk({k: v[live] for k, v in full.items()})
+    pat = chain_pattern("H", ("x", "A", "E", "y", "A"), ("y", "A", "E", "z", "A"))
+
+    def rows(gr):
+        t = _match_by_joins(gr, pat)
+        w = np.asarray(gr.edges.col("w"))
+        return sorted(zip(np.asarray(t.col("x")).tolist(),
+                          np.asarray(t.col("y")).tolist(),
+                          np.asarray(t.col("z")).tolist(),
+                          w[np.asarray(t.col("e0"))].tolist(),
+                          w[np.asarray(t.col("e1"))].tolist()))
+
+    assert rows(g) == rows(oracle)
+    # and the topology engine agrees with the join engine over base ⊕ delta
+    rel = match(g, plan_pattern(g, pat, {}, projected=set()))
+    assert len(rel.columns["x"]) == len(rows(g))
+
+
+def test_shortest_paths_equal_rebuild(mutated_and_oracle):
+    g, oracle = mutated_and_oracle
+    src_vids = np.repeat(np.arange(4), 3)
+    dst_vids = np.tile(np.array([0, 3, 8]), 4)  # B vids incl. a delta vertex
+    got = shortest_path_lengths(g, g.nid_of("A", src_vids),
+                                g.nid_of("B", dst_vids))
+    want = shortest_path_lengths(oracle, oracle.nid_of("A", src_vids),
+                                 oracle.nid_of("B", dst_vids))
+    assert np.array_equal(got, want)
+
+
+def test_compaction_preserves_results_and_resets_delta(mutated_and_oracle):
+    g, oracle = mutated_and_oracle
+    before = _match_rows(g)
+    n_live = g.n_live_edges
+    g.compact()
+    assert not g.delta.has_pending()
+    assert g.edges.nrows == n_live  # tombstones physically dropped
+    assert g.fwd.n_edges == n_live
+    assert _match_rows(g) == before == _match_rows(oracle)
+    # label blocks are contiguous again
+    for lbl in g.labels:
+        lo, hi = g.label_range(lbl)
+        assert hi - lo == g.vertex_tables[lbl].nrows
+
+
+def test_auto_compaction_triggers():
+    A, B, E = _mk_tables()
+    cfg = deltastore.DeltaConfig(min_delta_edges=8, max_delta_ratio=0.01)
+    g = _graph_from(A, B, E, cfg=cfg)
+    for _ in range(5):
+        g.insert_edges({"svid": np.arange(3), "tvid": np.arange(3),
+                        "w": np.array([1, 2, 3])})
+    assert g.compactions >= 1
+    assert len(g.delta.segments) <= 2  # folded into base
+
+
+def test_write_path_performs_no_rebuild_work():
+    """The acceptance criterion: a batch insert/delete does no O(V+E) work —
+    the base CSR object is untouched and the charged write cost is
+    batch-proportional, not graph-proportional."""
+    rng = np.random.default_rng(1)
+    n, e, b = 2000, 10000, 100
+    g = Graph("G", {"A": Table("A", {"attr": np.zeros(n, np.int64)})},
+              Table("E", {"svid": rng.integers(0, n, e).astype(np.int64),
+                          "tvid": rng.integers(0, n, e).astype(np.int64),
+                          "w": np.zeros(e, np.int64)}),
+              "A", "A")
+    base_fwd, base_rev = g.fwd, g.rev
+    deltastore.WRITE_COUNTERS.reset()
+    g.insert_edges({"svid": rng.integers(0, n, b).astype(np.int64),
+                    "tvid": rng.integers(0, n, b).astype(np.int64),
+                    "w": np.zeros(b, np.int64)})
+    g.delete_edges(np.arange(10))
+    c = deltastore.WRITE_COUNTERS
+    assert c.compactions == 0 and c.compact_ops == 0
+    assert g.fwd is base_fwd and g.rev is base_rev  # no rebuild happened
+    assert c.write_ops <= 20 * b                    # O(b log b), nowhere near e
+    assert g.n_live_edges == e + b - 10
+
+
+# ---------------------------------------------------------------------------
+# Epoch-keyed inter-buffer: writes invalidate cached GCDA results
+# ---------------------------------------------------------------------------
+
+
+def _analytics_db():
+    db = Database()
+    rng = np.random.default_rng(5)
+    persons = Table("P", {"pid": np.arange(6, dtype=np.int64)})
+    tags = Table("T", {"tid": np.arange(4, dtype=np.int64)})
+    edges = Table("E", {"svid": rng.integers(0, 6, 12).astype(np.int64),
+                        "tvid": rng.integers(0, 4, 12).astype(np.int64)})
+    db.add_graph(Graph("G", {"P": persons, "T": tags}, edges, "P", "T"))
+    return db
+
+
+def _sim_task():
+    pat = chain_pattern("G", ("p", "P", "E", "t", "T"))
+    q = Query(select=("p.pid", "t.tid"), froms=(), match=pat)
+    return GCDIATask(integration=q,
+                     analytics=AnalyticsTask("SIMILARITY",
+                                             [("random", "p.pid", "t.tid", 4)]))
+
+
+def test_analyze_recomputes_after_graph_write():
+    db = _analytics_db()
+    eng = GredoEngine(db)
+    out1 = eng.analyze(_sim_task())
+    eng.analyze(_sim_task())
+    assert eng.interbuffer.hits == 1  # unchanged epoch -> structural reuse
+    # mutate the source graph: every new-vertex edge changes the incidence
+    db.graphs["G"].insert_edges({"svid": np.array([0, 0, 0]),
+                                 "tvid": np.array([3, 2, 1])})
+    out2 = eng.analyze(_sim_task())
+    assert eng.interbuffer.hits == 1  # epoch changed -> MISS, recomputed
+    assert eng.interbuffer.misses >= 2
+    assert (np.asarray(out1).shape != np.asarray(out2).shape
+            or not np.allclose(np.asarray(out1), np.asarray(out2)))
+
+
+def test_duplicate_and_empty_write_batches():
+    A, B, E = _mk_tables()
+    g = _graph_from(A, B, E, cfg=_no_compact())
+    n_live = g.n_live_edges
+    g.delete_edges(np.array([0, 0, 3, 3]))   # duplicates count once
+    assert g.delta.n_tombstones == 2 and g.n_live_edges == n_live - 2
+    e_before = g.epoch
+    g.delete_edges(np.array([0]))            # re-delete is a no-op
+    assert g.delta.n_tombstones == 2
+    assert g.epoch == e_before               # no spurious cache invalidation
+    g2 = _graph_from(A, B, E)
+    g2.insert_vertices("A", {"attr": np.array([], np.int64), "tag": []})
+    g2.insert_edges({"svid": np.array([], np.int64),
+                     "tvid": np.array([], np.int64), "w": np.array([], np.int64)})
+    g2.delete_edges(np.array([], np.int64))
+    assert not g2.delta.has_pending() and g2.epoch == 0  # all no-ops
+
+
+def test_compact_after_delete_advances_epoch():
+    """Dropping tombstones renumbers edge tids — observable via
+    tid-projecting queries — so that compaction must invalidate caches."""
+    A, B, E = _mk_tables()
+    g = _graph_from(A, B, E, cfg=_no_compact())
+    g.insert_edges({"svid": np.array([0]), "tvid": np.array([0]),
+                    "w": np.array([1])})
+    e1 = g.epoch
+    g.compact()                      # pure merge: tids unchanged -> no bump
+    assert g.epoch == e1
+    g.delete_edges(np.array([2]))
+    e2 = g.epoch
+    g.compact()                      # renumbering -> epoch advances
+    assert g.epoch == e2 + 1
+
+
+def test_device_matcher_refuses_pending_delta():
+    from repro.core.pattern_jit import DevicePatternMatcher
+    A, B, E = _mk_tables()
+    g = _graph_from(A, B, E, cfg=_no_compact())
+    g.delete_edges(np.array([0]))
+    with pytest.raises(ValueError, match="pending delta"):
+        DevicePatternMatcher(g)
+    g.compact()
+    DevicePatternMatcher(g)  # clean after an explicit compaction
+
+
+def test_add_graph_replacement_invalidates_cache():
+    db = _analytics_db()
+    eng = GredoEngine(db)
+    eng.analyze(_sim_task())
+    eng.analyze(_sim_task())
+    assert eng.interbuffer.hits == 1
+    db2 = _analytics_db()            # same name, fresh graph (epoch 0)
+    db.add_graph(db2.graphs["G"])
+    eng.analyze(_sim_task())
+    assert eng.interbuffer.hits == 1  # replacement bumped the epoch lineage
+
+
+def test_analyze_recomputes_after_table_touch():
+    db = _analytics_db()
+    db.add_table(Table("R", {"k": np.arange(3)}))
+    eng = GredoEngine(db)
+    pat = chain_pattern("G", ("p", "P", "E", "t", "T"))
+    q = Query(select=("p.pid", "t.tid"), froms=("R",), match=pat,
+              where=(Predicate("R.k", ">=", 0),))
+    task = GCDIATask(integration=q, analytics=AnalyticsTask(
+        "SIMILARITY", [("random", "p.pid", "t.tid", 4)]))
+    eng.analyze(task)
+    eng.analyze(task)
+    assert eng.interbuffer.hits == 1
+    db.touch_table("R")
+    eng.analyze(task)
+    assert eng.interbuffer.hits == 1  # table epoch bump invalidates too
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: inter-buffer LRU + ragged-column edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_interbuffer_lru_no_duplicate_order_entries():
+    buf = InterBuffer(capacity_bytes=1 << 20)
+    m = jnp.ones((4, 4))
+    for _ in range(5):
+        buf.put("k", m)     # re-put must not duplicate LRU entries
+    assert len(buf) == 1
+    assert buf.nbytes() == int(m.size) * m.dtype.itemsize
+    buf.put("k2", m)
+    assert buf.get("k") is not None and buf.get("k2") is not None
+
+
+def test_interbuffer_evicts_lru_and_oversized():
+    one_kb = jnp.ones((256,), jnp.float32)  # 1 KiB
+    buf = InterBuffer(capacity_bytes=2048)
+    buf.put("a", one_kb)
+    buf.put("b", one_kb)
+    buf.get("a")                      # a becomes MRU
+    buf.put("c", one_kb)              # evicts b (LRU), not a
+    assert buf.get("b") is None and buf.get("a") is not None
+    # a single entry larger than capacity must not stick around
+    buf.put("huge", jnp.ones((4096,), jnp.float32))
+    assert buf.nbytes() <= 2048 and buf.get("huge") is None
+
+
+def test_ragged_take_and_predicates_on_empty_rows():
+    r = RaggedColumn(lists=[[1, 2], [], [5]])
+    t = r.take(np.array([], dtype=np.int64))     # empty selection
+    assert len(t) == 0 and len(t.values) == 0
+    t2 = r.take(np.array([1, 1]))                # duplicated empty row
+    assert len(t2) == 2 and list(t2.lengths()) == [0, 0]
+    tbl = Table("D", {"xs": RaggedColumn(lists=[[], [], []])})
+    mask = tbl.eval_predicate(Predicate("D.xs", ">=", 0))
+    assert list(mask) == [False, False, False]   # ANY over empty rows
+    tbl2 = Table("D", {"xs": r})
+    assert list(tbl2.eval_predicate(Predicate("D.xs", "==", 5))) == \
+        [False, False, True]
+
+
+def test_insert_promotes_numeric_dtype_like_seed_path():
+    """A float batch into an int column must promote (seed np.concatenate
+    semantics), not truncate to the base dtype."""
+    A, B, E = _mk_tables()
+    g = _graph_from(A, B, E, cfg=_no_compact())
+    g.insert_vertices("A", {"attr": np.array([4.5]), "tag": ["f"]})
+    merged = np.asarray(g.vertex_tables["A"].col("attr"))
+    assert merged.dtype.kind == "f" and merged[-1] == 4.5
+
+
+def test_dict_column_incremental_append():
+    c = DictColumn(values=["b", "a", "b"])
+    c2 = c.append(["a", "zz", "b", "zz"])
+    assert list(c2.decode(c2.codes)) == ["b", "a", "b", "a", "zz", "b", "zz"]
+    assert len(c2.vocab) == 3            # only one genuinely new value
+    assert np.array_equal(c2.codes[:3], c.codes)  # existing codes untouched
+    assert c.encode("zz") == -1          # original column is unaffected
+
+
+def test_delta_segment_neighbors_matches_csr():
+    rng = np.random.default_rng(11)
+    n, e = 30, 120
+    src = rng.integers(0, n, e).astype(np.int64)
+    dst = rng.integers(0, n, e).astype(np.int64)
+    seg = deltastore.EdgeSegment(src, dst, np.arange(e))
+    csr = build_csr(n, src, dst)
+    frontier = rng.integers(0, n, 10)
+    pos, d1, e1 = seg.neighbors(frontier)
+    s_rep, d2, e2 = csr.neighbors(frontier)
+    assert sorted(zip(frontier[pos], d1, e1)) == \
+        sorted(zip(s_rep, d2, e2.astype(np.int64)))
+    # reverse direction == forward on the transposed edge set
+    posr, dr, er = seg.neighbors(frontier, reverse=True)
+    segT = deltastore.EdgeSegment(dst, src, np.arange(e))
+    posf, df, ef = segT.neighbors(frontier)
+    assert sorted(zip(frontier[posr], dr, er)) == sorted(zip(frontier[posf], df, ef))

@@ -88,12 +88,21 @@ def test_shortest_path(db):
 def test_graph_updates(db):
     g = db.graphs["Interested_in"]
     n_edges = g.edges.nrows
+    epoch0 = g.epoch
     svid = np.asarray(g.edges.col("svid"))[:2]
     g.delete_edges(np.array([0, 1]))
-    assert g.edges.nrows == n_edges - 2
-    assert g.fwd.n_edges == n_edges - 2
+    # tombstone semantics: edge tids stay stable until compaction, but the
+    # live count and every topology read drop the deleted edges immediately
+    assert g.n_live_edges == n_edges - 2
+    _, _, eids = g.expand(np.arange(g.n_vertices))
+    assert len(eids) == n_edges - 2 and 0 not in eids and 1 not in eids
     g.insert_edges({"svid": svid, "tvid": np.array([0, 1]),
                     "weight": np.array([0.5, 0.6])})
-    assert g.edges.nrows == n_edges
-    # mappers stay consistent: every adjacency slot maps to a real edge
+    assert g.n_live_edges == n_edges
+    assert g.epoch == epoch0 + 2  # every mutation advances the write epoch
+    # compaction folds the delta into a fresh base; mappers stay consistent:
+    # every adjacency slot maps to a real edge
+    g.compact()
+    assert not g.delta.has_pending()
+    assert g.edges.nrows == n_edges and g.fwd.n_edges == n_edges
     assert g.fwd.edge_id.max() < g.edges.nrows
