@@ -1,11 +1,14 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench-smoke bench bench-update
+.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia
 
 # tier-1 verification
 test:
 	python -m pytest -x -q
+
+# alias used by CI / the verify skill
+verify: test
 
 # core engine + write-path tests only (quick inner loop)
 test-fast:
@@ -22,3 +25,7 @@ bench:
 
 bench-update:
 	python -m benchmarks.run --suite update
+
+# operator-level inter-buffer reuse (per-operator timings + hit rates)
+bench-gcdia:
+	python -m benchmarks.run --suite gcdia

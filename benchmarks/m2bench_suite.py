@@ -143,6 +143,53 @@ def gcda_ablation(sf: int = 1, volcano_cap: int = 400,
     return rows
 
 
+def gcdia_operator_reuse(sf: int = 1) -> list[dict]:
+    """§6.4 structural matching at *operator* granularity: one engine runs a
+    sequence of GCDIA tasks over the same integration and we record, per
+    step, the per-operator timings plus which DAG nodes were satisfied from
+    the inter-buffer. The reuse ladder:
+      1. cold A3 MULTIPLY                 — everything executes
+      2. A2 SIMILARITY (same matrix gen)  — hit at RandomAccessMatrix
+      3. MULTIPLY over rel2matrix         — hit at the GCDI Project root
+      4. A2 after a source write          — epoch bump, everything re-runs
+    """
+    from repro.core.schema import AnalyticsTask, GCDIATask
+
+    db = m2bench.generate(sf=sf)
+    eng = GredoEngine(db)
+    rows: list[dict] = []
+
+    def run(step: str, task) -> None:
+        hits0, miss0 = eng.interbuffer.hits, eng.interbuffer.misses
+        secs, _ = _timed(lambda: eng.analyze(task), repeat=1)
+        s = eng.last_stats
+        hits = eng.interbuffer.hits - hits0
+        misses = eng.interbuffer.misses - miss0
+        rows.append({
+            "table": "gcdia_operator_reuse", "sf": sf, "step": step,
+            "seconds": secs, "record_fetches": s.record_fetches,
+            "nodes_reused": s.nodes_reused, "root_hit": s.interbuffer_hit,
+            "interbuffer_hits": hits, "interbuffer_misses": misses,
+            "hit_rate": hits / max(hits + misses, 1),
+            "operators": [{"op": o["op"], "rows": o["rows"],
+                           "ms": round(o["seconds"] * 1e3, 3),
+                           "cached": o["cached"], "executed": o["executed"]}
+                          for o in s.operators],
+        })
+
+    run("cold_A3_multiply", m2bench.a3_multiply())
+    run("warm_A2_similarity_shared_matrix", m2bench.a2_similarity())
+    run("warm_multiply_rel2matrix_shared_gcdi", GCDIATask(
+        integration=m2bench.q_g1(),
+        analytics=AnalyticsTask("MULTIPLY",
+                                [("rel2matrix", ("Customer.id", "t.tid"))])))
+    db.graphs["Interested_in"].insert_edges(
+        {"svid": np.array([0]), "tvid": np.array([0]),
+         "weight": np.array([0.5])})
+    run("post_write_A2_similarity", m2bench.a2_similarity())
+    return rows
+
+
 def interbuffer_reuse(sf: int = 1) -> list[dict]:
     db = m2bench.generate(sf=sf)
     eng = GredoEngine(db)

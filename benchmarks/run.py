@@ -19,15 +19,41 @@ def _update_suite(fast: bool) -> list[dict]:
     return rows
 
 
+def _gcdia_suite(sf: int) -> list[dict]:
+    """Operator-level inter-buffer reuse: per-step hit rates + per-operator
+    timings of the physical DAG (ISSUE 2 acceptance output)."""
+    from . import m2bench_suite as m2
+    rows = m2.gcdia_operator_reuse(sf=sf)
+    for r in rows:
+        print(f"gcdia_{r['step']}_sf{r['sf']},{r['seconds']*1e6:.1f},"
+              f"hit_rate={r['hit_rate']:.2f};reused_nodes={r['nodes_reused']};"
+              f"fetches={r['record_fetches']}")
+        for o in r["operators"]:
+            tag = ("interbuffer-hit" if o["cached"]
+                   else "ran" if o["executed"] else "skipped")
+            print(f"#   {o['op']:<20} {tag:<15} rows={o['rows']} "
+                  f"ms={o['ms']}", file=sys.stderr)
+    return rows
+
+
+def _save(all_rows: list[dict]) -> None:
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print("# full records -> experiments/bench_results.json", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sf", type=int, default=1)
     ap.add_argument("--fast", action="store_true",
                     help="skip the scale-factor sweep / use smoke sizes")
-    ap.add_argument("--suite", choices=("paper", "update", "all"),
+    ap.add_argument("--suite", choices=("paper", "update", "gcdia", "all"),
                     default="paper",
                     help="paper: GCDI/GCDA tables; update: write-path "
-                         "throughput (delta store vs full rebuild)")
+                         "throughput (delta store vs full rebuild); gcdia: "
+                         "operator-level inter-buffer reuse (per-operator "
+                         "timings + hit rates)")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -36,14 +62,16 @@ def main() -> None:
     print("name,us_per_call,derived")
     all_rows: list[dict] = []
 
+    if args.suite in ("gcdia", "all"):
+        all_rows += _gcdia_suite(sf=args.sf)
+        if args.suite == "gcdia":
+            _save(all_rows)
+            return
+
     if args.suite in ("update", "all"):
         all_rows += _update_suite(fast=args.fast)
         if args.suite == "update":
-            os.makedirs("experiments", exist_ok=True)
-            with open("experiments/bench_results.json", "w") as f:
-                json.dump(all_rows, f, indent=1, default=str)
-            print("# full records -> experiments/bench_results.json",
-                  file=sys.stderr)
+            _save(all_rows)
             return
 
     # Figs. 7-8 + Fig. 10: GCDI ablation & graph workloads
@@ -89,10 +117,7 @@ def main() -> None:
         print(f"kernel_{r['kernel'].split('(')[0]},{r['oracle_s']*1e6:.1f},"
               f"{d}block={r['tpu_block']}")
 
-    os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.json", "w") as f:
-        json.dump(all_rows, f, indent=1, default=str)
-    print("# full records -> experiments/bench_results.json", file=sys.stderr)
+    _save(all_rows)
 
 
 if __name__ == "__main__":

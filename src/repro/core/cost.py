@@ -62,6 +62,18 @@ def should_push_range(g, tbl, pred) -> bool:
     return push_cost <= defer_cost
 
 
+# ---- physical-operator costs (consumed by physical.estimate) ---------------
+
+def cost_scan(n: int) -> float:
+    """Sequential RecordAM scan of n records."""
+    return n * (COST_IO + COST_CPU)
+
+
+def cost_project(n: int, n_attrs: int) -> float:
+    """Graph projection π̂_A': one tid-based record fetch per (row, attr)."""
+    return n * max(n_attrs, 1) * (COST_IO + COST_CPU)
+
+
 # ---- cross-model join cost (Eq. 14-16) ---------------------------------------
 
 BLOCK_RECORDS = 1024  # b: records per block (vector register tile analogue)

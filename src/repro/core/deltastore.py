@@ -260,6 +260,103 @@ def should_compact(cfg: DeltaConfig, delta: GraphDelta, n_base_edges: int) -> bo
 
 
 # ---------------------------------------------------------------------------
+# Incremental merged record views: capacity-doubling column buffers
+# ---------------------------------------------------------------------------
+
+
+def _promote(buf: Growable, run_dtype) -> Growable:
+    """Dtype promotion (e.g. a float batch into an int column): one O(n)
+    re-seed, matching np.concatenate semantics — Growable.append alone would
+    silently cast/truncate to the buffer dtype."""
+    promoted = np.result_type(buf.view().dtype, run_dtype)
+    if promoted != buf.view().dtype:
+        return Growable(buf.view().astype(promoted))
+    return buf
+
+
+class ColumnMerger:
+    """Incremental base ⊕ runs merge for one column. The base is wrapped
+    (O(1)); the first append pays one O(base) copy into a capacity-doubling
+    buffer; every later write/read cycle appends only the unseen run tail —
+    the merge is O(delta), not O(base), per cycle."""
+
+    def __init__(self, base):
+        from .storage import DictColumn, RaggedColumn
+        self.n_runs = 0
+        if isinstance(base, DictColumn):
+            self.kind = "dict"
+            self.codes = Growable(base.codes)
+            self.vocab = Growable(np.asarray(list(base.vocab), dtype=object))
+            self.index = {v: i for i, v in enumerate(base.vocab)}
+        elif isinstance(base, RaggedColumn):
+            self.kind = "ragged"
+            self.values = Growable(np.asarray(base.values))
+            self.offsets = Growable(np.asarray(base.offsets, dtype=np.int64))
+        else:
+            self.kind = "array"
+            self.buf = Growable(np.asarray(base))
+
+    def absorb(self, runs: list) -> None:
+        """Fold runs[n_absorbed:] into the buffers (the delta tail only)."""
+        from .storage import encode_batch
+        for r in runs[self.n_runs:]:
+            if self.kind == "dict":
+                vals = np.asarray(r, dtype=object).tolist()
+                new_codes, fresh = encode_batch(vals, self.index, self.vocab.n)
+                if fresh:
+                    self.vocab.append(np.asarray(fresh, dtype=object))
+                self.codes.append(new_codes)
+            elif self.kind == "ragged":
+                rows = [np.asarray(row) for row in r]
+                last = int(self.offsets.view()[-1])
+                lens = np.asarray([len(row) for row in rows], dtype=np.int64)
+                self.offsets.append(last + np.cumsum(lens))
+                if len(rows):
+                    tail = np.concatenate(rows) if len(rows) > 1 else rows[0]
+                    self.values = _promote(self.values, tail.dtype)
+                    self.values.append(tail)
+            else:
+                run = np.asarray(r)
+                self.buf = _promote(self.buf, run.dtype)
+                self.buf.append(run)
+        self.n_runs = len(runs)
+
+    def view(self):
+        from .storage import DictColumn, RaggedColumn
+        if self.kind == "dict":
+            return DictColumn(codes=self.codes.view(), vocab=self.vocab.view())
+        if self.kind == "ragged":
+            return RaggedColumn(values=self.values.view(),
+                                offsets=self.offsets.view())
+        return self.buf.view()
+
+
+class TableMerger:
+    """Incremental base ⊕ delta view of one record table. ``table(runs)``
+    absorbs only runs appended since the last call and returns a (cached)
+    merged Table — alternating single-batch writes with record reads no
+    longer re-pay an O(base) concat per cycle."""
+
+    def __init__(self, base_table):
+        self.name = base_table.name
+        self.mergers = {k: ColumnMerger(c) for k, c in base_table.columns.items()}
+        self._cached = None
+        self._cached_runs = -1
+
+    def table(self, runs: dict[str, list]):
+        from .storage import Table
+        n_runs = max((len(r) for r in runs.values()), default=0)
+        if self._cached is not None and n_runs == self._cached_runs:
+            return self._cached
+        for k, m in self.mergers.items():
+            m.absorb(runs.get(k, []))
+        self._cached = Table(self.name,
+                             {k: m.view() for k, m in self.mergers.items()})
+        self._cached_runs = n_runs
+        return self._cached
+
+
+# ---------------------------------------------------------------------------
 # Column-run merging (shared by the lazy table views and compaction)
 # ---------------------------------------------------------------------------
 

@@ -1,14 +1,19 @@
 """GredoEngine — the unified query processing engine facade (paper Fig. 2).
 
-GCDI: parse(SFMW AST) -> plan (optimizer §6.2) -> execute (operators §5).
-GCDA: materialize matrices into the inter-buffer -> invoke parallel
-analytical operators -> reuse via structural plan matching (§6.4).
+GCDI: parse(SFMW AST) -> plan (optimizer §6.2) -> physical DAG -> execute.
+GCDA: the same DAG grows matrix-generation and analytical-operator nodes;
+intermediate results are materialized in the inter-buffer keyed by node
+*signatures* (structural plan matching §6.4), so a repeated GCDIA with a
+different analytics op reuses the GCDI relation and matrices mid-plan.
 
 ``mode`` selects the ablation variant (§7.2):
   * "gredo"   — full system (operators + optimizations)      [GredoDB]
   * "dual"    — topology traversal, no pushdown/optimization  [GredoDB-D]
   * "single"  — no topology store: matches run as edge-table
                 equi-joins in the relational engine           [GredoDB-S]
+
+All three modes execute through the same physical executor — they differ
+only in the plan shape the builder emits (``physical.build_gcdi``).
 """
 from __future__ import annotations
 
@@ -16,14 +21,16 @@ import dataclasses
 import time
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
-from . import analytics, join as join_mod, pattern as pattern_mod, planner
-from .interbuffer import InterBuffer, fingerprint
-from .schema import AnalyticsTask, GCDIATask, Pattern, Query
-from .storage import Database, Graph, Table
+from . import join as join_mod, pattern as pattern_mod, physical, planner
+from .interbuffer import InterBuffer
+from .schema import GCDIATask, Query
+from .storage import Database, Table
 from . import traversal
+
+# moved to repro.core.join; alias kept for existing importers
+_match_by_joins = join_mod.match_by_joins
 
 
 @dataclasses.dataclass
@@ -33,6 +40,11 @@ class ExecStats:
     record_fetches: int
     cpu_ops: int
     interbuffer_hit: bool = False
+    # per-operator rows/bytes/seconds of the executed physical DAG
+    # (pre-order; see physical.collect_stats)
+    operators: list = dataclasses.field(default_factory=list)
+    # inter-buffer reuse below the root: # of DAG nodes satisfied from cache
+    nodes_reused: int = 0
     # write-path observability: pending-delta state of the matched graph
     # (segments / delta_edges / delta_vertices / tombstones) + lifetime
     # compaction counters (see repro.core.deltastore)
@@ -48,6 +60,7 @@ class GredoEngine:
         self.mode = mode
         self.interbuffer = InterBuffer(interbuffer_bytes)
         self.last_stats: Optional[ExecStats] = None
+        self.last_dag: Optional[physical.PhysicalOp] = None
 
     # ------------------------------------------------------------------ GCDI
     def plan(self, q: Query) -> planner.GCDIPlan:
@@ -55,97 +68,71 @@ class GredoEngine:
         return planner.plan(self.db, q, enable_opt=enable_opt,
                             enable_pattern_pushdown=enable_opt)
 
+    def physical_plan(self, q: Query) -> physical.PhysicalOp:
+        """Lower a GCDI task to its physical operator DAG (unexecuted)."""
+        return physical.build_gcdi(self.db, self.plan(q), mode=self.mode)
+
     def query(self, q: Query) -> Table:
         traversal.COUNTERS.reset()
         t0 = time.perf_counter()
-        if self.mode == "single":
-            result = self._execute_single_engine(q)
-            notes = ["single-engine: match via edge-table equi-joins"]
-        else:
-            p = self.plan(q)
-            result = planner.execute(self.db, p)
-            notes = p.notes
+        p = self.plan(q)
+        dag = physical.build_gcdi(self.db, p, mode=self.mode)
+        ctx = physical.ExecContext(self.db)
+        result = physical.execute(dag, ctx)
+        notes = list(p.notes)
+        if self.mode == "single" and q.match is not None:
+            notes.insert(0, "single-engine: match via edge-table equi-joins")
+        self.last_dag = dag
         self.last_stats = ExecStats(
             plan_notes=notes, seconds=time.perf_counter() - t0,
             record_fetches=traversal.COUNTERS.record_fetches,
-            cpu_ops=traversal.COUNTERS.cpu_ops)
-        if q.match is not None:
+            cpu_ops=traversal.COUNTERS.cpu_ops,
+            operators=physical.collect_stats(dag))
+        self._attach_delta_stats(q)
+        return result
+
+    def explain(self, q: Query) -> str:
+        """Operator-DAG rendering of the plan for ``q`` (plan shape only;
+        run the query and use ``explain_last`` for per-operator stats)."""
+        return physical.explain(self.physical_plan(q))
+
+    def explain_last(self) -> str:
+        """Per-operator rows/bytes/seconds of the most recent execution."""
+        if self.last_dag is None:
+            return "(nothing executed yet)"
+        return physical.explain(self.last_dag, stats=True)
+
+    def _attach_delta_stats(self, q: Query) -> None:
+        if q.match is not None and self.last_stats is not None:
             g = self.db.graphs[q.match.graph]
             self.last_stats.delta = g.delta.stats()
             self.last_stats.compactions = g.compactions
-        return result
-
-    def _epoch_signature(self, q: Query) -> tuple:
-        """Write epochs of every collection the GCDI task reads — part of the
-        inter-buffer key, so any mutation of a source graph/table invalidates
-        dependent cached GCDA matrices."""
-        names = list(q.froms)
-        if q.match is not None:
-            names.append(q.match.graph)
-        return tuple((n, self.db.epoch_of(n)) for n in names)
-
-    def _execute_single_engine(self, q: Query) -> Table:
-        """GredoDB-S: translate the match into multi-way joins over the edge
-        table (the TBS strategy §2.2) then run the rest of the plan."""
-        if q.match is None:
-            p = planner.plan(self.db, q, enable_opt=False)
-            return planner.execute(self.db, p)
-        g = self.db.graphs[q.match.graph]
-        rel = _match_by_joins(g, q.match)
-        # wrap: substitute the join-produced graph-relation for the match,
-        # then evaluate the pattern predicates post-hoc (no pushdown in TBS)
-        p = planner.plan(self.db, q, enable_opt=False)
-        deferred = p.pattern_plan.deferred if p.pattern_plan else {}
-        orig_match = pattern_mod.match
-        pattern_mod.match = lambda *_a, **_k: pattern_mod.apply_deferred(
-            g, q.match, rel, deferred)
-        try:
-            return planner.execute(self.db, p)
-        finally:
-            pattern_mod.match = orig_match
 
     # ------------------------------------------------------------------ GCDA
     def analyze(self, task: GCDIATask, *, use_kernel: bool | None = None,
                 iters: int = 100):
-        """Run a full GCDIA: GCDI -> G (matrix gen) -> A (parallel op)."""
-        key = fingerprint(task.integration, task.analytics.op,
-                          task.analytics.inputs, self.mode,
-                          self._epoch_signature(task.integration))
-        cached = self.interbuffer.get(key)
-        if cached is not None:
-            if self.last_stats:
-                self.last_stats.interbuffer_hit = True
-            return cached
-        gcdi_result = self.query(task.integration)
-        mats = []
-        for spec in task.analytics.inputs:
-            kind = spec[0]
-            if kind == "rel2matrix":
-                mats.append(analytics.rel2matrix(gcdi_result, spec[1]))
-            elif kind == "random":
-                m, _ = analytics.random_access_matrix(
-                    gcdi_result, spec[1], spec[2], spec[3])
-                mats.append(m)
-            elif kind == "const":
-                mats.append(jnp.asarray(spec[1]))
-            else:
-                raise ValueError(kind)
-        op = task.analytics.op
-        if op == "MULTIPLY":
-            rhs = mats[1] if len(mats) > 1 else mats[0].T  # Gram product default
-            out = analytics.multiply(mats[0], rhs, use_kernel=use_kernel)
-        elif op == "SIMILARITY":
-            out = analytics.similarity(mats[0], mats[1] if len(mats) > 1 else mats[0],
-                                       use_kernel=use_kernel)
-        elif op == "REGRESSION":
-            labels = mats[1].reshape(-1) if len(mats) > 1 else None
-            if labels is None:
-                raise ValueError("REGRESSION needs (features, labels)")
-            out = analytics.regression(mats[0], labels, iters=iters,
-                                       use_kernel=use_kernel)[0]
-        else:
-            raise ValueError(op)
-        return self.interbuffer.put(key, out)
+        """Run a full GCDIA: GCDI -> G (matrix gen) -> A (parallel op), as
+        one physical DAG. Cacheable operators (the GCDI relation, generated
+        matrices, analytics outputs) are keyed in the inter-buffer by node
+        signature; signatures embed source write epochs, so reuse survives
+        exactly until a source collection mutates."""
+        traversal.COUNTERS.reset()
+        t0 = time.perf_counter()
+        p = self.plan(task.integration)
+        dag = physical.build_gcdia(self.db, p, task, mode=self.mode,
+                                   use_kernel=use_kernel, iters=iters)
+        ctx = physical.ExecContext(self.db, interbuffer=self.interbuffer)
+        out = physical.execute(dag, ctx)
+        self.last_dag = dag
+        self.last_stats = ExecStats(
+            plan_notes=list(p.notes), seconds=time.perf_counter() - t0,
+            record_fetches=traversal.COUNTERS.record_fetches,
+            cpu_ops=traversal.COUNTERS.cpu_ops,
+            interbuffer_hit=dag.stats.cached,
+            operators=physical.collect_stats(dag),
+            nodes_reused=ctx.nodes_reused)
+        self._attach_delta_stats(task.integration)
+        return out
 
     # ------------------------------------------------------- graph utilities
     def shortest_path(self, graph: str, src_label: str, src_vids, dst_label: str,
@@ -153,45 +140,3 @@ class GredoEngine:
         g = self.db.graphs[graph]
         return pattern_mod.shortest_path_lengths(
             g, g.nid_of(src_label, src_vids), g.nid_of(dst_label, dst_vids))
-
-
-def _match_by_joins(g: Graph, pat: Pattern) -> Table:
-    """TBS-style pattern matching: k-hop pattern == k-way self-join of the
-    edge table on svid/tvid (index-accelerated in AgensGraph; sort-merge
-    here). No topology store, no pushdown — intermediate results grow
-    multiplicatively, which is exactly the §2.2 critique."""
-    chain_vars = [pat.vertices[0].var] + [e.dst for e in pat.edges]
-    edge_vars = [e.var for e in pat.edges]
-    if not edge_vars:  # vertex-only pattern: full vertex scan
-        var = pat.vertices[0].var
-        n = g.vertex_tables[pat.vertex(var).label].nrows
-        traversal.COUNTERS.record_fetches += n
-        return Table("join0", {var: np.arange(n)})
-    from .deltastore import expand_runs
-    live = g.live_edge_ids()  # tombstoned edges never join
-    svid = np.asarray(g.edges.col("svid"))
-    tvid = np.asarray(g.edges.col("tvid"))
-    if g.delta.n_tombstones:  # only copy-filter when something is dead
-        svid, tvid = svid[live], tvid[live]
-    traversal.COUNTERS.record_fetches += 2 * len(svid) * max(len(edge_vars), 1)
-
-    cols = {chain_vars[0]: svid, edge_vars[0]: live, chain_vars[1]: tvid}
-    cur = Table("join0", cols)
-    # the edge table is static across hops: sort once, probe per hop
-    order = np.argsort(svid, kind="stable")
-    svid_s = svid[order]
-    for h in range(1, len(edge_vars)):
-        # join cur.tail == edges.svid
-        tail = np.asarray(cur.col(chain_vars[h]))
-        lo = np.searchsorted(svid_s, tail, "left")
-        hi = np.searchsorted(svid_s, tail, "right")
-        l_rep, pos = expand_runs(lo, hi - lo)
-        total = len(pos)
-        traversal.COUNTERS.cpu_ops += total
-        traversal.COUNTERS.record_fetches += total
-        rows = order[pos]
-        ncols = {k: np.asarray(v)[l_rep] for k, v in cur.columns.items()}
-        ncols[edge_vars[h]] = live[rows]
-        ncols[chain_vars[h + 1]] = tvid[rows]
-        cur = Table(f"join{h}", ncols)
-    return cur

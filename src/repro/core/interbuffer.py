@@ -16,6 +16,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def fingerprint(*parts: Any) -> str:
@@ -25,8 +26,22 @@ def fingerprint(*parts: Any) -> str:
     return h.hexdigest()[:16]
 
 
-def _entry_bytes(mat: jax.Array) -> int:
-    return int(mat.size) * mat.dtype.itemsize
+def _column_nbytes(col) -> int:
+    if hasattr(col, "codes"):       # DictColumn: codes + a vocab estimate
+        return int(col.codes.nbytes) + 16 * len(col.vocab)
+    if hasattr(col, "offsets"):     # RaggedColumn
+        return int(np.asarray(col.values).nbytes) + int(col.offsets.nbytes)
+    return int(np.asarray(col).nbytes)
+
+
+def value_nbytes(val) -> int:
+    """Resident size of an inter-buffer entry: a device matrix or a
+    materialized GCDI relation (columnar Table)."""
+    if hasattr(val, "columns"):     # Table duck type
+        return sum(_column_nbytes(c) for c in val.columns.values())
+    if hasattr(val, "size") and hasattr(val, "dtype"):
+        return int(val.size) * val.dtype.itemsize
+    return int(np.asarray(val).nbytes)
 
 
 class InterBuffer:
@@ -43,7 +58,7 @@ class InterBuffer:
         self.misses = 0
         self.evictions = 0
 
-    def get(self, key: str) -> Optional[jax.Array]:
+    def get(self, key: str):
         mat = self._store.get(key)
         if mat is not None:
             self.hits += 1
@@ -52,13 +67,14 @@ class InterBuffer:
         self.misses += 1
         return None
 
-    def put(self, key: str, mat: jax.Array) -> jax.Array:
-        mat = jnp.asarray(mat)
+    def put(self, key: str, mat):
+        if not hasattr(mat, "columns"):   # matrices live on device; Tables as-is
+            mat = jnp.asarray(mat)
         old = self._store.pop(key, None)
         if old is not None:
-            self._nbytes -= _entry_bytes(old)
+            self._nbytes -= value_nbytes(old)
         self._store[key] = mat
-        self._nbytes += _entry_bytes(mat)
+        self._nbytes += value_nbytes(mat)
         self._evict()
         return mat
 
@@ -71,7 +87,7 @@ class InterBuffer:
     def _evict(self):
         while self._nbytes > self.capacity_bytes and self._store:
             _, victim = self._store.popitem(last=False)
-            self._nbytes -= _entry_bytes(victim)
+            self._nbytes -= value_nbytes(victim)
             self.evictions += 1
 
     def clear(self):

@@ -89,6 +89,49 @@ def semi_join_graph(g: Graph, label: str, vcol: str, other: Table, ocol: str
     return hit
 
 
+def match_by_joins(g: Graph, pat) -> Table:
+    """TBS-style pattern matching (GredoDB-S): k-hop pattern == k-way
+    self-join of the edge table on svid/tvid (index-accelerated in
+    AgensGraph; sort-merge here). No topology store, no pushdown —
+    intermediate results grow multiplicatively, which is exactly the §2.2
+    critique. Executed by the physical plan's TableJoinMatch operator."""
+    from .deltastore import expand_runs
+    chain_vars = [pat.vertices[0].var] + [e.dst for e in pat.edges]
+    edge_vars = [e.var for e in pat.edges]
+    if not edge_vars:  # vertex-only pattern: full vertex scan
+        var = pat.vertices[0].var
+        n = g.vertex_tables[pat.vertex(var).label].nrows
+        traversal.COUNTERS.record_fetches += n
+        return Table("join0", {var: np.arange(n)})
+    live = g.live_edge_ids()  # tombstoned edges never join
+    svid = np.asarray(g.edges.col("svid"))
+    tvid = np.asarray(g.edges.col("tvid"))
+    if g.delta.n_tombstones:  # only copy-filter when something is dead
+        svid, tvid = svid[live], tvid[live]
+    traversal.COUNTERS.record_fetches += 2 * len(svid) * max(len(edge_vars), 1)
+
+    cols = {chain_vars[0]: svid, edge_vars[0]: live, chain_vars[1]: tvid}
+    cur = Table("join0", cols)
+    # the edge table is static across hops: sort once, probe per hop
+    order = np.argsort(svid, kind="stable")
+    svid_s = svid[order]
+    for h in range(1, len(edge_vars)):
+        # join cur.tail == edges.svid
+        tail = np.asarray(cur.col(chain_vars[h]))
+        lo = np.searchsorted(svid_s, tail, "left")
+        hi = np.searchsorted(svid_s, tail, "right")
+        l_rep, pos = expand_runs(lo, hi - lo)
+        total = len(pos)
+        traversal.COUNTERS.cpu_ops += total
+        traversal.COUNTERS.record_fetches += total
+        rows = order[pos]
+        ncols = {k: np.asarray(v)[l_rep] for k, v in cur.columns.items()}
+        ncols[edge_vars[h]] = live[rows]
+        ncols[chain_vars[h + 1]] = tvid[rows]
+        cur = Table(f"join{h}", ncols)
+    return cur
+
+
 def semi_join_graph_edges(g: Graph, ecol: str, other: Table, ocol: str) -> np.ndarray:
     """graph ⋈̂ rel/doc over edge records: boolean mask of edges."""
     ek, erows = _key_arrays(g.edges, ecol)

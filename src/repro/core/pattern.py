@@ -139,10 +139,13 @@ def plan_pattern(g: Graph, pattern: Pattern, phi: dict[str, list[Predicate]],
 
 
 def _candidate_mask(g: Graph, pattern: Pattern, var: str,
-                    preds: list[Predicate]) -> Optional[np.ndarray]:
+                    preds: list[Predicate],
+                    extra: Optional[np.ndarray] = None) -> Optional[np.ndarray]:
     """M(v_p) after pushdown: boolean mask over the label's vid space
-    (Lines 3-7 of Algorithm 2 with the §5.2 pushdown modification)."""
-    if not preds:
+    (Lines 3-7 of Algorithm 2 with the §5.2 pushdown modification).
+    ``extra`` is a pre-computed candidate mask over the same vid space —
+    the semi-join output of join pushdown (Eq. 9/10), intersected in."""
+    if not preds and extra is None:
         return None
     is_edge = any(e.var == var for e in pattern.edges)
     tbl = g.edges if is_edge else g.vertex_tables[pattern.vertex(var).label]
@@ -151,12 +154,18 @@ def _candidate_mask(g: Graph, pattern: Pattern, var: str,
         mask &= tbl.eval_predicate(p)
         traversal.COUNTERS.record_fetches += tbl.nrows  # pushdown scans the column
         traversal.COUNTERS.cpu_ops += tbl.nrows
+    if extra is not None:
+        mask = mask & extra
     return mask
 
 
-def match(g: Graph, plan: PatternPlan) -> Table:
+def match(g: Graph, plan: PatternPlan,
+          extra_masks: Optional[dict] = None) -> Table:
     """Execute P(G, P): returns the graph-relation as a Table with one column
-    per pattern var — vertex columns hold vids, edge columns hold edge tids."""
+    per pattern var — vertex columns hold vids, edge columns hold edge tids.
+    ``extra_masks`` maps vertex vars to semi-join candidate masks (join
+    pushdown inputs, supplied as explicit plan edges by the physical DAG)."""
+    extra_masks = extra_masks or {}
     pattern = plan.pattern
     chain_vars = [pattern.vertices[0].var] + [e.dst for e in pattern.edges]
     edge_vars = [e.var for e in pattern.edges]
@@ -172,7 +181,8 @@ def match(g: Graph, plan: PatternPlan) -> Table:
     # block plus appended delta nids, in merged-table row order)
     member: dict[str, Optional[np.ndarray]] = {}
     for v in chain_vars:
-        m = _candidate_mask(g, pattern, v, plan.pushed.get(v, []))
+        m = _candidate_mask(g, pattern, v, plan.pushed.get(v, []),
+                            extra_masks.get(v))
         if m is not None:
             full = np.zeros(g.n_vertices, dtype=bool)
             full[g.label_nids(pattern.vertex(v).label)] = m

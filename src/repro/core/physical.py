@@ -1,0 +1,939 @@
+"""Unified physical operator DAG (paper §5/§6.4, operator-level execution).
+
+One plan IR from GCDI scans to GCDA kernels. ``planner.plan`` still makes
+the *logical* decisions (pushdown sets, semi-join choices, match trimming);
+:func:`build_gcdi` / :func:`build_gcdia` turn a :class:`~.planner.GCDIPlan`
+(plus an optional analytics spec) into a typed DAG of :class:`PhysicalOp`
+nodes, and :func:`execute` walks it bottom-up.
+
+Every node carries
+  * ``children`` — input operators,
+  * ``run(ctx, *inputs)`` — the vectorized implementation,
+  * ``stats`` — per-operator rows / bytes / seconds / cache flags,
+  * ``signature()`` — a canonical structural fingerprint that embeds the
+    write epochs of every source collection the subtree reads.
+
+The inter-buffer is keyed on node signatures (structural plan matching,
+§6.4): a repeated GCDIA task with a *different* analytics operator reuses
+the materialized GCDI relation and generated matrices mid-plan, because the
+shared sub-DAG has the same signature; any write to a source collection
+bumps its epoch and changes every dependent signature, so stale reuse is
+impossible. This replaces both monkey-patch execution paths: semi-join
+candidate masks are ordinary :class:`SemiJoinMask` input edges into
+:class:`MatchPattern`, and the GredoDB-S ablation is a
+:class:`TableJoinMatch` node over the relational join engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import analytics
+from . import join as join_mod
+from . import pattern as pattern_mod
+from . import traversal
+from .interbuffer import InterBuffer, fingerprint, value_nbytes
+from .schema import JoinPred, Pattern, Query
+from .storage import Database, Table
+
+
+# ---------------------------------------------------------------------------
+# Node infrastructure
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class NodeStats:
+    rows: Optional[int] = None
+    nbytes: int = 0
+    seconds: float = 0.0
+    executed: bool = False
+    cached: bool = False        # satisfied from the inter-buffer
+    memoized: bool = False      # satisfied from this execution's memo
+
+
+class ExecContext:
+    """One bottom-up DAG execution: per-run memo keyed by node signature
+    (shared sub-plans run once) plus an optional persistent inter-buffer
+    consulted at cacheable nodes (cross-task structural reuse)."""
+
+    def __init__(self, db: Database, interbuffer: Optional[InterBuffer] = None):
+        self.db = db
+        self.interbuffer = interbuffer
+        self.memo: dict = {}
+        self.nodes_run = 0
+        self.nodes_reused = 0     # inter-buffer hits during this execution
+
+
+class PhysicalOp:
+    kind = "op"
+    cacheable = False   # eligible for inter-buffer persistence
+
+    def __init__(self, *children: "PhysicalOp"):
+        self.children = tuple(children)
+        self.stats = NodeStats()
+        self._sig = None
+
+    # -- structural fingerprint (embeds source epochs via params) --
+    def params(self) -> tuple:
+        return ()
+
+    def signature(self) -> tuple:
+        if self._sig is None:
+            self._sig = (self.kind, self.params(),
+                         tuple(c.signature() for c in self.children))
+        return self._sig
+
+    def run(self, ctx: ExecContext, *inputs):
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return self.kind
+
+
+def _preds_sig(preds) -> tuple:
+    return tuple(repr(p) for p in preds)
+
+
+def _pred_map_sig(m: dict) -> tuple:
+    return tuple((v, _preds_sig(ps)) for v, ps in sorted(m.items()))
+
+
+def _pattern_sig(pattern: Pattern) -> tuple:
+    return pattern.canonical()
+
+
+def _pplan_sig(pplan) -> tuple:
+    if pplan is None:
+        return ()
+    return (bool(pplan.reverse), _pred_map_sig(pplan.pushed),
+            _pred_map_sig(pplan.deferred), tuple(sorted(pplan.fetch_vars)))
+
+
+def _result_rows(out) -> Optional[int]:
+    if isinstance(out, Table):
+        return out.nrows
+    if hasattr(out, "shape"):
+        return int(out.shape[0]) if getattr(out, "ndim", 0) else 1
+    return None
+
+
+# ---------------------------------------------------------------------------
+# GCDI operators (plan steps 1-5 as node constructors)
+# ---------------------------------------------------------------------------
+
+
+class ScanTable(PhysicalOp):
+    """Base relational/document collection scan (RecordAM full scan)."""
+    kind = "ScanTable"
+
+    def __init__(self, name: str, epoch: int):
+        super().__init__()
+        self.name = name
+        self.epoch = epoch
+
+    def params(self):
+        return (self.name, self.epoch)
+
+    def run(self, ctx, *inputs):
+        return ctx.db.tables[self.name]
+
+    def describe(self):
+        return f"ScanTable[{self.name}]"
+
+
+class Select(PhysicalOp):
+    """σ with pushed-down predicates (mechanism 1: table-side pushdown)."""
+    kind = "Select"
+
+    def __init__(self, child: PhysicalOp, preds: list):
+        super().__init__(child)
+        self.preds = list(preds)
+
+    def params(self):
+        return _preds_sig(self.preds)
+
+    def run(self, ctx, t: Table):
+        for pred in self.preds:
+            t = t.take(np.nonzero(t.eval_predicate(pred))[0])
+        return t
+
+    def describe(self):
+        return f"Select[{', '.join(repr(p) for p in self.preds)}]"
+
+
+class Alias(PhysicalOp):
+    """Qualify column names with the collection name before cluster joins."""
+    kind = "Alias"
+
+    def __init__(self, child: PhysicalOp, name: str):
+        super().__init__(child)
+        self.name = name
+
+    def params(self):
+        return (self.name,)
+
+    def run(self, ctx, t: Table):
+        return Table(t.name, {f"{self.name}.{k}": v for k, v in t.columns.items()})
+
+    def describe(self):
+        return f"Alias[{self.name}]"
+
+
+class SemiJoinMask(PhysicalOp):
+    """Join pushdown (Eq. 9/10): graph ⋈̂ table as a candidate vertex mask
+    consumed by MatchPattern — an explicit plan edge, not a monkey-patch."""
+    kind = "SemiJoinMask"
+
+    def __init__(self, graph: str, epoch: int, label: str, vcol: str,
+                 ocol: str, table_child: PhysicalOp):
+        super().__init__(table_child)
+        self.graph = graph
+        self.epoch = epoch
+        self.label = label
+        self.vcol = vcol
+        self.ocol = ocol
+
+    def params(self):
+        return (self.graph, self.epoch, self.label, self.vcol, self.ocol)
+
+    def run(self, ctx, other: Table):
+        g = ctx.db.graphs[self.graph]
+        return join_mod.semi_join_graph(g, self.label, self.vcol, other, self.ocol)
+
+    def describe(self):
+        return f"SemiJoinMask[{self.label}.{self.vcol} ∈ {self.ocol}]"
+
+
+class MatchPattern(PhysicalOp):
+    """Hybrid topology+attribute pattern matching (Algorithm 2). Children
+    are SemiJoinMask nodes whose masks shrink candidate sets before the
+    traversal; ``mask_vars[i]`` names the pattern var mask ``i`` applies to."""
+    kind = "MatchPattern"
+
+    def __init__(self, graph: str, epoch: int, pplan, mask_vars: tuple,
+                 *mask_children: PhysicalOp):
+        super().__init__(*mask_children)
+        self.graph = graph
+        self.epoch = epoch
+        self.pplan = pplan
+        self.mask_vars = tuple(mask_vars)
+
+    def params(self):
+        return (self.graph, self.epoch, _pattern_sig(self.pplan.pattern),
+                _pplan_sig(self.pplan), self.mask_vars)
+
+    def run(self, ctx, *masks):
+        g = ctx.db.graphs[self.graph]
+        extra: dict = {}
+        for var, m in zip(self.mask_vars, masks):
+            extra[var] = m if var not in extra else (extra[var] & m)
+        return pattern_mod.match(g, self.pplan, extra_masks=extra or None)
+
+    def describe(self):
+        p = self.pplan
+        d = "rev" if p.reverse else "fwd"
+        pushed = ",".join(f"{v}:{len(ps)}" for v, ps in sorted(p.pushed.items())) or "-"
+        deferred = ",".join(f"{v}:{len(ps)}" for v, ps in sorted(p.deferred.items())) or "-"
+        hops = len(p.pattern.edges)
+        return (f"MatchPattern[{self.graph} dir={d} hops={hops} "
+                f"pushed={pushed} deferred={deferred}]")
+
+
+class TableJoinMatch(PhysicalOp):
+    """GredoDB-S ablation: the pattern as k-way edge-table equi-joins (the
+    TBS strategy §2.2) with deferred predicates evaluated post-hoc."""
+    kind = "TableJoinMatch"
+
+    def __init__(self, graph: str, epoch: int, pattern: Pattern, deferred: dict):
+        super().__init__()
+        self.graph = graph
+        self.epoch = epoch
+        self.pattern = pattern
+        self.deferred = dict(deferred)
+
+    def params(self):
+        return (self.graph, self.epoch, _pattern_sig(self.pattern),
+                _pred_map_sig(self.deferred))
+
+    def run(self, ctx, *inputs):
+        g = ctx.db.graphs[self.graph]
+        rel = join_mod.match_by_joins(g, self.pattern)
+        return pattern_mod.apply_deferred(g, self.pattern, rel, self.deferred)
+
+    def describe(self):
+        return f"TableJoinMatch[{self.graph} hops={len(self.pattern.edges)}]"
+
+
+class VertexScan(PhysicalOp):
+    """Match trimming case 1 (§6.2): no topology constraint -> record scan."""
+    kind = "VertexScan"
+
+    def __init__(self, graph: str, epoch: int, pattern: Pattern, pplan):
+        super().__init__()
+        self.graph = graph
+        self.epoch = epoch
+        self.pattern = pattern
+        self.pplan = pplan
+
+    def params(self):
+        return (self.graph, self.epoch, _pattern_sig(self.pattern),
+                _pplan_sig(self.pplan))
+
+    def run(self, ctx, *inputs):
+        g = ctx.db.graphs[self.graph]
+        var = self.pattern.vertices[0].var
+        tbl = g.vertex_tables[self.pattern.vertex(var).label]
+        mask = np.ones(tbl.nrows, dtype=bool)
+        preds = self.pplan.deferred.get(var, []) if self.pplan else []
+        for pred in preds:
+            mask &= tbl.eval_predicate(pred)
+        return Table(f"match:{self.pattern.graph}", {var: np.nonzero(mask)[0]})
+
+    def describe(self):
+        return f"VertexScan[{self.graph}.{self.pattern.vertices[0].var}]"
+
+
+class EdgeScan(PhysicalOp):
+    """Match trimming case 2 (§6.2): v-e-v, edge-only predicates -> edge scan."""
+    kind = "EdgeScan"
+
+    def __init__(self, graph: str, epoch: int, pattern: Pattern, pplan):
+        super().__init__()
+        self.graph = graph
+        self.epoch = epoch
+        self.pattern = pattern
+        self.pplan = pplan
+
+    def params(self):
+        return (self.graph, self.epoch, _pattern_sig(self.pattern),
+                _pplan_sig(self.pplan))
+
+    def run(self, ctx, *inputs):
+        g = ctx.db.graphs[self.graph]
+        evar = self.pattern.edges[0].var
+        mask = g.live_edge_mask()
+        preds = self.pplan.deferred.get(evar, []) if self.pplan else []
+        for pred in preds:
+            mask &= g.edges.eval_predicate(pred)
+        return Table(f"match:{self.pattern.graph}", {evar: np.nonzero(mask)[0]})
+
+    def describe(self):
+        return f"EdgeScan[{self.graph}.{self.pattern.edges[0].var}]"
+
+
+class GraphProject(PhysicalOp):
+    """Graph projection π̂_A' (projection trimming): fetch referenced record
+    attributes for matched bindings via the tid-based RecordAM."""
+    kind = "GraphProject"
+
+    def __init__(self, graph: str, epoch: int, pattern: Pattern, keep: tuple,
+                 wanted: dict, child: PhysicalOp):
+        super().__init__(child)
+        self.graph = graph
+        self.epoch = epoch
+        self.pattern = pattern
+        self.keep = tuple(sorted(keep))
+        self.wanted = {v: list(dict.fromkeys(attrs)) for v, attrs in wanted.items()}
+
+    def params(self):
+        return (self.graph, self.epoch, self.keep,
+                tuple((v, tuple(a)) for v, a in sorted(self.wanted.items())))
+
+    def run(self, ctx, rel: Table):
+        g = ctx.db.graphs[self.graph]
+        edge_vars = {e.var for e in self.pattern.edges}
+        cols: dict[str, np.ndarray] = {}
+        for var in self.keep:
+            if var not in rel.columns:
+                continue
+            ids = np.asarray(rel.col(var))
+            cols[f"{var}.__id"] = ids
+            tbl = (g.edges if var in edge_vars
+                   else g.vertex_tables[self.pattern.vertex(var).label])
+            for attr in self.wanted.get(var, []):
+                col = tbl.col(attr)
+                cols[f"{var}.{attr}"] = (col.take(ids) if hasattr(col, "take")
+                                         else np.asarray(col)[ids])
+                traversal.COUNTERS.record_fetches += len(ids)
+        return Table(rel.name, cols if cols else dict(rel.columns))
+
+    def describe(self):
+        return f"GraphProject[{self.graph} keep={','.join(self.keep) or '-'}]"
+
+
+class EquiJoin(PhysicalOp):
+    """Cross-model sort-merge equi-join ⋈̂ merging two plan clusters."""
+    kind = "EquiJoin"
+
+    def __init__(self, jp: JoinPred, left: PhysicalOp, right: PhysicalOp):
+        super().__init__(left, right)
+        self.jp = jp
+
+    def params(self):
+        return (self.jp.left, self.jp.right)
+
+    def run(self, ctx, lc: Table, rc: Table):
+        li, ri = join_mod.equi_join_indices(
+            lc, _col_in(lc, self.jp.left), rc, _col_in(rc, self.jp.right))
+        lt, rt = lc.take(li), rc.take(ri)
+        cols = dict(lt.columns)
+        cols.update(rt.columns)
+        return Table(f"{lc.name}⋈{rc.name}", cols)
+
+    def describe(self):
+        return f"EquiJoin[{self.jp.left}={self.jp.right}]"
+
+
+class IntraFilter(PhysicalOp):
+    """Join predicate whose sides already live in one cluster: a row filter."""
+    kind = "IntraFilter"
+
+    def __init__(self, jp: JoinPred, child: PhysicalOp):
+        super().__init__(child)
+        self.jp = jp
+
+    def params(self):
+        return (self.jp.left, self.jp.right)
+
+    def run(self, ctx, t: Table):
+        lv = np.asarray(t.col(_col_in(t, self.jp.left)))
+        rv = np.asarray(t.col(_col_in(t, self.jp.right)))
+        return t.take(np.nonzero(lv == rv)[0])
+
+    def describe(self):
+        return f"IntraFilter[{self.jp.left}={self.jp.right}]"
+
+
+class Residual(PhysicalOp):
+    """σ_Ψ residue: predicates evaluated on the joined relation."""
+    kind = "Residual"
+
+    def __init__(self, preds: list, child: PhysicalOp):
+        super().__init__(child)
+        self.preds = list(preds)
+
+    def params(self):
+        return _preds_sig(self.preds)
+
+    def run(self, ctx, t: Table):
+        for pred in self.preds:
+            col = _col_in(t, pred.attr)
+            mask = t.eval_predicate(dataclasses.replace(pred, attr=f"x.{col}"))
+            t = t.take(np.nonzero(mask)[0])
+        return t
+
+    def describe(self):
+        return f"Residual[{', '.join(repr(p) for p in self.preds)}]"
+
+
+class Project(PhysicalOp):
+    """π_A final projection — the GCDI root. Its signature embeds the write
+    epoch of *every* collection the task reads, so it is the structural-match
+    reuse point for the materialized GCDI relation. Cacheable."""
+    kind = "Project"
+    cacheable = True
+
+    def __init__(self, select: tuple, epochs: tuple, child: PhysicalOp):
+        super().__init__(child)
+        self.select = tuple(select)
+        self.epochs = tuple(epochs)
+
+    def params(self):
+        return (self.select, self.epochs)
+
+    def run(self, ctx, t: Table):
+        cols = {}
+        for a in self.select:
+            cols[a] = t.col(_col_in(t, a))
+        return Table("result", cols)
+
+    def describe(self):
+        return f"Project[{', '.join(self.select)}]"
+
+
+# ---------------------------------------------------------------------------
+# GCDA operators (matrix generation G + analytical operators A, Eq. 5)
+# ---------------------------------------------------------------------------
+
+
+class Rel2Matrix(PhysicalOp):
+    """REL2MATRIX local access: columnar GCDI columns -> (n, k) device matrix."""
+    kind = "Rel2Matrix"
+    cacheable = True
+
+    def __init__(self, columns, child: PhysicalOp):
+        super().__init__(child)
+        self.columns = tuple(columns)
+
+    def params(self):
+        return (self.columns,)
+
+    def run(self, ctx, rel: Table):
+        return analytics.rel2matrix(rel, self.columns)
+
+    def describe(self):
+        return f"Rel2Matrix[{', '.join(self.columns)}]"
+
+
+class RandomAccessMatrix(PhysicalOp):
+    """Random access: aggregate multi-valued attributes of qualifying records
+    into per-group multi-hot / count feature rows."""
+    kind = "RandomAccessMatrix"
+    cacheable = True
+
+    def __init__(self, group_col: str, value_col: str, n_features: int,
+                 child: PhysicalOp):
+        super().__init__(child)
+        self.group_col = group_col
+        self.value_col = value_col
+        self.n_features = int(n_features)
+
+    def params(self):
+        return (self.group_col, self.value_col, self.n_features)
+
+    def run(self, ctx, rel: Table):
+        m, _ = analytics.random_access_matrix(
+            rel, self.group_col, self.value_col, self.n_features)
+        return m
+
+    def describe(self):
+        return (f"RandomAccessMatrix[{self.group_col} x {self.value_col} "
+                f"-> {self.n_features}f]")
+
+
+class Const(PhysicalOp):
+    """Literal matrix input."""
+    kind = "Const"
+
+    def __init__(self, value):
+        super().__init__()
+        self.value = value
+        arr = np.asarray(value)
+        # content digest computed once — signatures stay O(1) per build
+        self._digest = (str(arr.dtype), arr.shape, fingerprint(arr.tobytes()))
+
+    def params(self):
+        return self._digest
+
+    def run(self, ctx, *inputs):
+        import jax.numpy as jnp
+        return jnp.asarray(self.value)
+
+    def describe(self):
+        return f"Const[{np.asarray(self.value).shape}]"
+
+
+class MatMul(PhysicalOp):
+    """MULTIPLY via the tiled MXU kernel; one child means the Gram product."""
+    kind = "MatMul"
+    cacheable = True
+
+    def __init__(self, use_kernel, lhs: PhysicalOp, rhs: Optional[PhysicalOp] = None):
+        super().__init__(*([lhs] if rhs is None else [lhs, rhs]))
+        self.use_kernel = use_kernel
+        self.gram = rhs is None
+
+    def params(self):
+        return (self.gram, self.use_kernel)
+
+    def run(self, ctx, x, y=None):
+        rhs = x.T if y is None else y
+        return analytics.multiply(x, rhs, use_kernel=self.use_kernel)
+
+    def describe(self):
+        return "MatMul[gram]" if self.gram else "MatMul"
+
+
+class Similarity(PhysicalOp):
+    """SIMILARITY: pairwise cosine scores via the fused kernel."""
+    kind = "Similarity"
+    cacheable = True
+
+    def __init__(self, use_kernel, lhs: PhysicalOp, rhs: Optional[PhysicalOp] = None):
+        super().__init__(*([lhs] if rhs is None else [lhs, rhs]))
+        self.use_kernel = use_kernel
+        self.self_sim = rhs is None
+
+    def params(self):
+        return (self.self_sim, self.use_kernel)
+
+    def run(self, ctx, x, y=None):
+        return analytics.similarity(x, x if y is None else y,
+                                    use_kernel=self.use_kernel)
+
+    def describe(self):
+        return "Similarity[self]" if self.self_sim else "Similarity"
+
+
+class Regression(PhysicalOp):
+    """REGRESSION: logistic regression with the fused gradient kernel."""
+    kind = "Regression"
+    cacheable = True
+
+    def __init__(self, iters: int, use_kernel, x: PhysicalOp, y: PhysicalOp):
+        super().__init__(x, y)
+        self.iters = int(iters)
+        self.use_kernel = use_kernel
+
+    def params(self):
+        return (self.iters, self.use_kernel)
+
+    def run(self, ctx, x, y):
+        return analytics.regression(x, y.reshape(-1), iters=self.iters,
+                                    use_kernel=self.use_kernel)[0]
+
+    def describe(self):
+        return f"Regression[iters={self.iters}]"
+
+
+# ---------------------------------------------------------------------------
+# DAG construction: GCDIPlan -> operator DAG (planner steps 1-5)
+# ---------------------------------------------------------------------------
+
+
+def _col_in(t: Table, attr: str) -> str:
+    if attr in t.columns:
+        return attr
+    if "." in attr:
+        bare = attr.split(".", 1)[1]
+        if bare in t.columns:
+            return bare
+    raise KeyError(f"{attr} not in {list(t.columns)[:12]}...")
+
+
+def _static_has_col(cols: set, attr: str) -> bool:
+    """Static mirror of ``_col_in`` over a predicted column-name set."""
+    return attr in cols or ("." in attr and attr.split(".", 1)[1] in cols)
+
+
+def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
+    """Emit the physical DAG for a logical GCDIPlan. The dynamic cluster
+    merging of the old executor is simulated statically: each collection's
+    output column set is known at plan time, so every join lands on a
+    concrete EquiJoin/IntraFilter node."""
+    from .planner import _graph_join_side
+
+    q: Query = p.query
+    pattern = q.match
+
+    # step 1: base tables with pushed selections
+    table_nodes: dict[str, PhysicalOp] = {}
+    for name in q.froms:
+        node: PhysicalOp = ScanTable(name, db.epoch_of(name))
+        preds = p.table_pushdown.get(name, [])
+        if preds:
+            node = Select(node, preds)
+        table_nodes[name] = node
+
+    # step 2: graph side
+    graph_node: Optional[PhysicalOp] = None
+    vars_in_rel: set[str] = set()
+    if pattern:
+        gname = pattern.graph
+        gep = db.epoch_of(gname)
+        all_vars = ({v.var for v in pattern.vertices}
+                    | {e.var for e in pattern.edges})
+        if mode == "single":
+            deferred = p.pattern_plan.deferred if p.pattern_plan else {}
+            graph_node = TableJoinMatch(gname, gep, pattern, deferred)
+            vars_in_rel = all_vars
+        elif p.match_trim == "vertex_scan":
+            graph_node = VertexScan(gname, gep, pattern, p.pattern_plan)
+            vars_in_rel = {pattern.vertices[0].var}
+        elif p.match_trim == "edge_scan":
+            graph_node = EdgeScan(gname, gep, pattern, p.pattern_plan)
+            vars_in_rel = {pattern.edges[0].var}
+        else:
+            mask_vars: list[str] = []
+            mask_nodes: list[PhysicalOp] = []
+            vset = {v.var for v in pattern.vertices}
+            for i in sorted(p.semi_join_idx):
+                jp = q.joins[i]
+                side = _graph_join_side(q, vset, jp)
+                if side is None:
+                    continue
+                tbl_attr, var_attr = side
+                tcoll, tcol = tbl_attr.split(".", 1)
+                vvar, vcol = var_attr.split(".", 1)
+                label = pattern.vertex(vvar).label
+                mask_vars.append(vvar)
+                mask_nodes.append(SemiJoinMask(gname, gep, label, vcol, tcol,
+                                              table_nodes[tcoll]))
+            graph_node = MatchPattern(gname, gep, p.pattern_plan,
+                                      tuple(mask_vars), *mask_nodes)
+            vars_in_rel = all_vars
+
+        # graph projection π̂_A' — static column prediction mirrors run()
+        keep = set(p.graph_projection) & vars_in_rel
+        wanted: dict[str, list[str]] = {}
+        for a in (list(q.select) + [jp.left for jp in q.joins]
+                  + [jp.right for jp in q.joins]):
+            c = a.split(".", 1)[0]
+            if c in keep and "." in a:
+                wanted.setdefault(c, []).append(a.split(".", 1)[1])
+        graph_node = GraphProject(gname, gep, pattern, tuple(sorted(keep)),
+                                  wanted, graph_node)
+        graph_cols: set[str] = set()
+        for var in sorted(keep):
+            graph_cols.add(f"{var}.__id")
+            for attr in dict.fromkeys(wanted.get(var, [])):
+                graph_cols.add(f"{var}.{attr}")
+        if not graph_cols:
+            graph_cols = set(vars_in_rel)
+
+    # step 3: multi-way joins — static cluster merging
+    clusters: list[tuple[PhysicalOp, set[str]]] = []
+    if graph_node is not None:
+        clusters.append((graph_node, graph_cols))
+    for name in q.froms:
+        t = db.tables[name]
+        clusters.append((Alias(table_nodes[name], name),
+                         {f"{name}.{k}" for k in t.columns}))
+
+    def _find(attr: str) -> int:
+        for ci, (_, cols) in enumerate(clusters):
+            if _static_has_col(cols, attr):
+                return ci
+        raise KeyError(f"join attr {attr} not found in any cluster")
+
+    for jp in q.joins:
+        li_c, ri_c = _find(jp.left), _find(jp.right)
+        if li_c == ri_c:
+            node, cols = clusters[li_c]
+            clusters[li_c] = (IntraFilter(jp, node), cols)
+            continue
+        ln, lc = clusters[li_c]
+        rn, rc = clusters[ri_c]
+        clusters[min(li_c, ri_c)] = (EquiJoin(jp, ln, rn), lc | rc)
+        del clusters[max(li_c, ri_c)]
+
+    if len(clusters) > 1:
+        # disconnected query: keep the cluster holding the projection attrs
+        needed = list(q.select) + [pr.attr for pr in p.residual]
+        scored = sorted(
+            ((sum(1 for a in needed if _static_has_col(cols, a)), i)
+             for i, (_, cols) in enumerate(clusters)),
+            key=lambda t: (-t[0], t[1]))
+        if scored[0][0] < len(needed):
+            raise ValueError("query is disconnected: projection attributes "
+                             "span un-joined collections")
+        current = clusters[scored[0][1]][0]
+    else:
+        current = clusters[0][0]
+
+    # step 4: residual predicates
+    if p.residual:
+        current = Residual(p.residual, current)
+
+    # step 5: final projection — root signature carries every source epoch
+    epochs = tuple((n, db.epoch_of(n)) for n in q.source_names())
+    return Project(q.select, epochs, current)
+
+
+def build_gcdia(db: Database, p, task, mode: str = "gredo", *,
+                use_kernel=None, iters: int = 100) -> PhysicalOp:
+    """Full GCDIA DAG: GCDI root -> matrix generation -> analytical op."""
+    gcdi_root = build_gcdi(db, p, mode=mode)
+    mats: list[PhysicalOp] = []
+    for spec in task.analytics.inputs:
+        kind = spec[0]
+        if kind == "rel2matrix":
+            mats.append(Rel2Matrix(tuple(spec[1]), gcdi_root))
+        elif kind == "random":
+            mats.append(RandomAccessMatrix(spec[1], spec[2], spec[3], gcdi_root))
+        elif kind == "const":
+            mats.append(Const(spec[1]))
+        else:
+            raise ValueError(kind)
+    op = task.analytics.op
+    if op == "MULTIPLY":
+        return MatMul(use_kernel, mats[0], mats[1] if len(mats) > 1 else None)
+    if op == "SIMILARITY":
+        return Similarity(use_kernel, mats[0], mats[1] if len(mats) > 1 else None)
+    if op == "REGRESSION":
+        if len(mats) < 2:
+            raise ValueError("REGRESSION needs (features, labels)")
+        return Regression(iters, use_kernel, mats[0], mats[1])
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------------
+# Execution: bottom-up walk with signature memoization + inter-buffer reuse
+# ---------------------------------------------------------------------------
+
+
+def execute(node: PhysicalOp, ctx: ExecContext):
+    sig = node.signature()
+    if sig in ctx.memo:
+        node.stats.memoized = True
+        return ctx.memo[sig]
+    if ctx.interbuffer is not None and node.cacheable:
+        hit = ctx.interbuffer.get(fingerprint(sig))
+        if hit is not None:
+            node.stats.cached = True
+            node.stats.rows = _result_rows(hit)
+            node.stats.nbytes = value_nbytes(hit)
+            ctx.nodes_reused += 1
+            ctx.memo[sig] = hit
+            return hit
+    inputs = [execute(c, ctx) for c in node.children]
+    t0 = time.perf_counter()
+    out = node.run(ctx, *inputs)
+    node.stats.seconds += time.perf_counter() - t0
+    node.stats.executed = True
+    node.stats.rows = _result_rows(out)
+    node.stats.nbytes = value_nbytes(out)
+    ctx.nodes_run += 1
+    if ctx.interbuffer is not None and node.cacheable:
+        out = ctx.interbuffer.put(fingerprint(sig), out)
+    ctx.memo[sig] = out
+    return out
+
+
+def estimate(root: PhysicalOp, db: Database) -> dict:
+    """Static (est_rows, est_cost) per node, bottom-up, using the §6.3 cost
+    model — the hook future cost-based DAG rewrites key off. Returns
+    ``{id(node): (est_rows, est_cost)}``."""
+    from . import cost as cost_mod
+    out: dict[int, tuple[float, float]] = {}
+
+    def sel(tbl: Table, preds) -> float:
+        s = 1.0
+        for p in preds:
+            s *= tbl.stats(p.column).selectivity(p)
+        return s
+
+    def walk(n: PhysicalOp) -> float:
+        if id(n) in out:
+            return out[id(n)][0]
+        child_rows = [walk(c) for c in n.children]
+        first = child_rows[0] if child_rows else 0.0
+        if isinstance(n, ScanTable):
+            rows = float(db.tables[n.name].nrows)
+            cost = cost_mod.cost_scan(rows)
+        elif isinstance(n, Select):
+            s = sel(db.tables[n.preds[0].collection], n.preds) if n.preds else 1.0
+            rows = first * s
+            cost = first * len(n.preds) * cost_mod.COST_CPU
+        elif isinstance(n, SemiJoinMask):
+            rows = float(db.graphs[n.graph].vertex_tables[n.label].nrows)
+            cost = cost_mod.cost_join(first, rows)
+        elif isinstance(n, MatchPattern):
+            g = db.graphs[n.graph]
+            p = n.pplan
+            chain = [p.pattern.vertices[0].var] + [e.dst for e in p.pattern.edges]
+            start = chain[-1] if p.reverse else chain[0]
+            stbl = g.vertex_tables[p.pattern.vertex(start).label]
+            n_start = stbl.nrows * sel(stbl, p.pushed.get(start, []))
+            hops = len(p.pattern.edges)
+            rows = n_start * (g.avg_out_degree ** hops)
+            cost = cost_mod.cost_pattern(
+                sum(len(ps) for v, ps in p.pushed.items()
+                    if not any(e.var == v for e in p.pattern.edges)),
+                sum(len(ps) for v, ps in p.pushed.items()
+                    if any(e.var == v for e in p.pattern.edges)),
+                g.n_vertices, g.n_live_edges, n_start, hops,
+                g.avg_out_degree, rows,
+                sum(len(ps) for ps in p.deferred.values()))
+        elif isinstance(n, TableJoinMatch):
+            g = db.graphs[n.graph]
+            hops = len(n.pattern.edges)
+            e, v = g.n_live_edges, max(g.n_vertices, 1)
+            rows = (float(e) * (e / v) ** (hops - 1) if hops
+                    else float(g.vertex_tables[n.pattern.vertices[0].label].nrows))
+            cost = sum(cost_mod.cost_join(rows, e) for _ in range(max(hops, 1)))
+        elif isinstance(n, VertexScan):
+            g = db.graphs[n.graph]
+            tbl = g.vertex_tables[n.pattern.vertex(n.pattern.vertices[0].var).label]
+            preds = n.pplan.deferred.get(n.pattern.vertices[0].var, []) if n.pplan else []
+            rows = tbl.nrows * sel(tbl, preds)
+            cost = cost_mod.cost_scan(tbl.nrows)
+        elif isinstance(n, EdgeScan):
+            g = db.graphs[n.graph]
+            preds = n.pplan.deferred.get(n.pattern.edges[0].var, []) if n.pplan else []
+            rows = g.edges.nrows * sel(g.edges, preds)
+            cost = cost_mod.cost_scan(g.edges.nrows)
+        elif isinstance(n, GraphProject):
+            rows = first
+            cost = cost_mod.cost_project(first, sum(map(len, n.wanted.values())))
+        elif isinstance(n, EquiJoin):
+            rows = max(child_rows)
+            cost = cost_mod.cost_join(child_rows[0], child_rows[1])
+        elif isinstance(n, (IntraFilter, Residual)):
+            k = len(getattr(n, "preds", (0,)))
+            rows = first / 3.0
+            cost = first * k * cost_mod.COST_CPU
+        else:   # Alias / Project / matrix generation / analytics
+            rows = first
+            cost = first * cost_mod.COST_CPU
+        out[id(n)] = (rows, cost)
+        return rows
+
+    walk(root)
+    return out
+
+
+def collect_stats(root: PhysicalOp) -> list[dict]:
+    """Flatten per-operator stats (pre-order, shared nodes once)."""
+    out: list[dict] = []
+    seen: set[int] = set()
+
+    def walk(n: PhysicalOp, depth: int):
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        s = n.stats
+        out.append({"op": n.kind, "describe": n.describe(), "depth": depth,
+                    "rows": s.rows, "nbytes": s.nbytes, "seconds": s.seconds,
+                    "executed": s.executed, "cached": s.cached})
+        for c in n.children:
+            walk(c, depth + 1)
+
+    walk(root, 0)
+    return out
+
+
+def explain(root: PhysicalOp, stats: bool = False,
+            db: Optional[Database] = None) -> str:
+    """GCDIPlan.explain()-style rendering of the operator DAG. With
+    ``stats=True`` (after execution) each row shows rows/bytes/seconds and
+    whether the operator was satisfied from the inter-buffer; with ``db``
+    each row shows the §6.3 cost-model estimates instead."""
+    lines: list[str] = []
+    seen: dict[int, int] = {}
+    ests = estimate(root, db) if db is not None else {}
+
+    def walk(n: PhysicalOp, depth: int):
+        pad = "  " * depth
+        if id(n) in seen:
+            lines.append(f"{pad}^shared:{n.describe()}")
+            return
+        seen[id(n)] = len(lines)
+        bits = []
+        if stats:
+            s = n.stats
+            if s.cached:
+                bits.append("interbuffer-hit")
+            elif s.memoized and not s.executed:
+                bits.append("memo")
+            if s.rows is not None:
+                bits.append(f"rows={s.rows}")
+            if s.nbytes:
+                bits.append(f"bytes={s.nbytes}")
+            if s.executed:
+                bits.append(f"ms={s.seconds * 1e3:.2f}")
+        if id(n) in ests:
+            er, ec = ests[id(n)]
+            bits.append(f"est_rows={er:.3g}")
+            bits.append(f"est_cost={ec:.3g}")
+        suffix = "  (" + ", ".join(bits) + ")" if bits else ""
+        lines.append(f"{pad}{n.describe()}{suffix}")
+        for c in n.children:
+            walk(c, depth + 1)
+
+    walk(root, 0)
+    return "\n".join(lines)

@@ -19,10 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import numpy as np
-
 from . import cost as cost_mod
-from . import join as join_mod
 from . import pattern as pattern_mod
 from .schema import JoinPred, Pattern, Predicate, Query
 from .storage import Database, Graph, Table
@@ -206,201 +203,13 @@ def _graph_join_side(q: Query, pattern_vars: set[str], jp: JoinPred):
 
 
 # ---------------------------------------------------------------------------
-# Execution
+# Execution — the logical plan is lowered to the physical operator DAG
+# (repro.core.physical) and walked bottom-up; steps 1-5 of the old monolithic
+# executor are now node constructors in ``physical.build_gcdi``.
 # ---------------------------------------------------------------------------
 
 
-def execute(db: Database, p: GCDIPlan) -> Table:
-    q = p.query
-    pattern = q.match
-
-    # 1. base tables with pushed selections
-    tables: dict[str, Table] = {}
-    for name in q.froms:
-        t = db.tables[name]
-        for pred in p.table_pushdown.get(name, []):
-            t = t.take(np.nonzero(t.eval_predicate(pred))[0])
-        tables[name] = t
-
-    # 2. graph side
-    graph_rel: Optional[Table] = None
-    consumed_joins: set[int] = set()
-    if pattern:
-        g = db.graphs[pattern.graph]
-        if p.match_trim == "vertex_scan":
-            graph_rel = _trimmed_vertex_scan(g, p)
-        elif p.match_trim == "edge_scan":
-            graph_rel = _trimmed_edge_scan(g, p)
-        else:
-            extra_masks = {}
-            for i in sorted(p.semi_join_idx):
-                jp = q.joins[i]
-                side = _graph_join_side(q, {v.var for v in pattern.vertices}, jp)
-                if side is None:
-                    continue
-                tbl_attr, var_attr = side
-                tcoll, tcol = tbl_attr.split(".", 1)
-                vvar, vcol = var_attr.split(".", 1)
-                label = pattern.vertex(vvar).label
-                mask = join_mod.semi_join_graph(g, label, vcol, tables[tcoll], tcol)
-                extra_masks[vvar] = mask & extra_masks.get(vvar, True)
-                # NOTE: semi-join restricts candidates; the real join still
-                # runs afterwards to attach table attributes (same as the
-                # paper: Eq. 9 keeps the outer join around the match).
-            graph_rel = _match_with_masks(g, p.pattern_plan, extra_masks)
-        graph_rel = _graph_project(g, pattern, graph_rel, p.graph_projection, q)
-
-    # 3. multi-way joins: cluster merging with sort-merge equi-joins.
-    # Each base table / the graph-relation starts as its own cluster; every
-    # join predicate merges (or filters within) a cluster.
-    clusters: list[Table] = []
-    if graph_rel is not None:
-        clusters.append(graph_rel)
-    for name in q.froms:
-        t = tables[name]
-        clusters.append(Table(t.name, {f"{name}.{k}": v for k, v in t.columns.items()}))
-
-    def _find(attr: str) -> int:
-        for ci, c in enumerate(clusters):
-            try:
-                _col_in(c, attr)
-                return ci
-            except KeyError:
-                continue
-        raise KeyError(f"join attr {attr} not found in any cluster")
-
-    for i, jp in enumerate(q.joins):
-        li_c, ri_c = _find(jp.left), _find(jp.right)
-        lc, rc = clusters[li_c], clusters[ri_c]
-        if li_c == ri_c:  # intra-cluster: filter rows where attrs are equal
-            lv = np.asarray(lc.col(_col_in(lc, jp.left)))
-            rv = np.asarray(lc.col(_col_in(lc, jp.right)))
-            clusters[li_c] = lc.take(np.nonzero(lv == rv)[0])
-            continue
-        li, ri = join_mod.equi_join_indices(
-            lc, _col_in(lc, jp.left), rc, _col_in(rc, jp.right))
-        lt, rt = lc.take(li), rc.take(ri)
-        cols = dict(lt.columns)
-        cols.update(rt.columns)
-        merged = Table(f"{lc.name}⋈{rc.name}", cols)
-        clusters[min(li_c, ri_c)] = merged
-        del clusters[max(li_c, ri_c)]
-        consumed_joins.add(i)
-
-    if len(clusters) > 1:
-        # disconnected query: keep the cluster holding the projection attrs
-        needed = list(q.select) + [pr.attr for pr in p.residual]
-        scored = []
-        for c in clusters:
-            hits = sum(1 for a in needed if _has_col(c, a))
-            scored.append((hits, c))
-        scored.sort(key=lambda t: -t[0])
-        if scored[0][0] < len(needed):
-            raise ValueError("query is disconnected: projection attributes "
-                             "span un-joined collections")
-        current = scored[0][1]
-    else:
-        current = clusters[0]
-
-    # 4. residual predicates
-    for pred in p.residual:
-        col = _col_in(current, pred.attr)
-        mask = current.eval_predicate(
-            dataclasses.replace(pred, attr=f"x.{col}"))
-        current = current.take(np.nonzero(mask)[0])
-
-    # 5. final projection
-    cols = {}
-    for a in q.select:
-        cols[a] = current.col(_col_in(current, a))
-    return Table("result", cols)
-
-
-def _col_in(t: Table, attr: str) -> str:
-    if attr in t.columns:
-        return attr
-    # allow "coll.col" when table stores it fully qualified or bare
-    if "." in attr:
-        bare = attr.split(".", 1)[1]
-        if bare in t.columns:
-            return bare
-    raise KeyError(f"{attr} not in {list(t.columns)[:12]}...")
-
-
-def _has_col(t: Table, attr: str) -> bool:
-    try:
-        _col_in(t, attr)
-        return True
-    except KeyError:
-        return False
-
-
-def _match_with_masks(g: Graph, pplan: pattern_mod.PatternPlan, extra: dict) -> Table:
-    """Inject semi-join candidate masks as additional pushed 'in-mask'
-    pseudo-predicates by intersecting them into the pattern's member tables."""
-    if not extra:
-        return pattern_mod.match(g, pplan)
-    # wrap: temporarily extend pushed with mask predicates via closure
-    orig = pattern_mod._candidate_mask
-
-    def patched(g2, pattern, var, preds):
-        m = orig(g2, pattern, var, preds)
-        if var in extra:
-            em = extra[var]
-            m = em.copy() if m is None else (m & em)
-        return m
-
-    pattern_mod._candidate_mask = patched
-    try:
-        return pattern_mod.match(g, pplan)
-    finally:
-        pattern_mod._candidate_mask = orig
-
-
-def _graph_project(g: Graph, pattern: Pattern, rel: Table, keep: set, q: Query) -> Table:
-    """Graph projection π̂_A': fetch referenced record attributes for matched
-    bindings (tid-based RecordAM); unreferenced vars are dropped (projection
-    trimming + traversal pruning: their records were never fetched)."""
-    from . import traversal
-    edge_vars = {e.var for e in pattern.edges}
-    cols: dict[str, np.ndarray] = {}
-    wanted_attrs: dict[str, list[str]] = {}
-    for a in list(q.select) + [jp.left for jp in q.joins] + [jp.right for jp in q.joins]:
-        c = a.split(".", 1)[0]
-        if c in keep and "." in a:
-            wanted_attrs.setdefault(c, []).append(a.split(".", 1)[1])
-    for var in sorted(keep):
-        if var not in rel.columns:
-            continue
-        ids = np.asarray(rel.col(var))
-        cols[f"{var}.__id"] = ids
-        tbl = g.edges if var in edge_vars else g.vertex_tables[pattern.vertex(var).label]
-        for attr in dict.fromkeys(wanted_attrs.get(var, [])):
-            col = tbl.col(attr)
-            cols[f"{var}.{attr}"] = (col.take(ids) if hasattr(col, "take")
-                                     else np.asarray(col)[ids])
-            traversal.COUNTERS.record_fetches += len(ids)
-    return Table(rel.name, cols if cols else dict(rel.columns))
-
-
-def _trimmed_vertex_scan(g: Graph, p: GCDIPlan) -> Table:
-    """Match trimming case 1: no topology constraints -> plain record scan."""
-    pattern = p.query.match
-    var = pattern.vertices[0].var
-    tbl = g.vertex_tables[pattern.vertex(var).label]
-    mask = np.ones(tbl.nrows, dtype=bool)
-    for pred in p.pattern_plan.deferred.get(var, []) if p.pattern_plan else []:
-        mask &= tbl.eval_predicate(pred)
-    vids = np.nonzero(mask)[0]
-    return Table(f"match:{pattern.graph}", {var: vids})
-
-
-def _trimmed_edge_scan(g: Graph, p: GCDIPlan) -> Table:
-    """Match trimming case 2: v-e-v, edge-only predicates -> edge scan."""
-    pattern = p.query.match
-    evar = pattern.edges[0].var
-    mask = g.live_edge_mask()  # fresh array; tombstoned edges never match
-    for pred in p.pattern_plan.deferred.get(evar, []) if p.pattern_plan else []:
-        mask &= g.edges.eval_predicate(pred)
-    eids = np.nonzero(mask)[0]
-    return Table(f"match:{pattern.graph}", {evar: eids})
+def execute(db: Database, p: GCDIPlan, mode: str = "gredo") -> Table:
+    from . import physical
+    dag = physical.build_gcdi(db, p, mode=mode)
+    return physical.execute(dag, physical.ExecContext(db))

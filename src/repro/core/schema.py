@@ -121,6 +121,13 @@ class Pattern:
                 return v
         raise KeyError(var)
 
+    def canonical(self) -> tuple:
+        """Structural identity of the pattern graph — the stable tuple the
+        physical plan's node signatures embed (§6.4 structural matching)."""
+        return (self.graph,
+                tuple((v.var, v.label) for v in self.vertices),
+                tuple((e.var, e.label, e.src, e.dst) for e in self.edges))
+
     @property
     def is_chain(self) -> bool:
         # v0 -e0-> v1 -e1-> v2 ... (each edge links consecutive vertices)
@@ -168,6 +175,14 @@ class Query:
 
     def predicates_on(self, collection: str) -> list[Predicate]:
         return [p for p in self.where if p.collection == collection]
+
+    def source_names(self) -> tuple[str, ...]:
+        """Every collection this task reads (tables/documents + the matched
+        graph) — the set whose write epochs gate inter-buffer reuse."""
+        names = list(self.froms)
+        if self.match is not None:
+            names.append(self.match.graph)
+        return tuple(names)
 
 
 # ---------------------------------------------------------------------------

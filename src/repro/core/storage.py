@@ -23,6 +23,25 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 
+def encode_batch(values: list, index: dict, n_vocab: int
+                 ) -> tuple[np.ndarray, list]:
+    """Encode a batch of values against an existing vocab ``index``, giving
+    fresh codes (from ``n_vocab`` up) to unseen values. Mutates ``index``;
+    returns (int32 codes, newly-seen values in first-appearance order). The
+    single encoding loop shared by ``DictColumn.append`` and the
+    delta store's incremental merged views (``deltastore.ColumnMerger``)."""
+    codes = np.empty(len(values), dtype=np.int32)
+    fresh: list = []
+    for i, v in enumerate(values):
+        c = index.get(v)
+        if c is None:
+            c = n_vocab + len(fresh)
+            index[v] = c
+            fresh.append(v)
+        codes[i] = c
+    return codes, fresh
+
+
 class DictColumn:
     """Dictionary-encoded string column: int32 codes into ``vocab``."""
 
@@ -54,17 +73,8 @@ class DictColumn:
         values = list(values)
         if self._index is None:
             self._index = {v: i for i, v in enumerate(self.vocab)}
-        index = dict(self._index)
-        vocab_ext: list = []
-        new_codes = np.empty(len(values), dtype=np.int32)
-        n = len(self.vocab)
-        for i, v in enumerate(values):
-            c = index.get(v)
-            if c is None:
-                c = n + len(vocab_ext)
-                index[v] = c
-                vocab_ext.append(v)
-            new_codes[i] = c
+        index = dict(self._index)   # this column stays unaffected
+        new_codes, vocab_ext = encode_batch(values, index, len(self.vocab))
         vocab = (np.concatenate([self.vocab, np.asarray(vocab_ext, dtype=object)])
                  if vocab_ext else self.vocab)
         out = DictColumn(codes=np.concatenate([self.codes, new_codes]), vocab=vocab)
@@ -447,22 +457,24 @@ class Graph:
         self._n_base_edges = edges.nrows
 
         self.delta = deltastore.GraphDelta(edges.nrows)
-        self._merged_edges: Optional[Table] = None
-        self._merged_vt: dict[str, Table] = {}
+        self._edge_merger = None
+        self._vt_mergers: dict[str, "deltastore.TableMerger"] = {}
         self.vertex_tables = _VertexTableView(self)
 
     # ---- merged (base ⊕ delta) record views ----
+    # Backed by capacity-doubling column buffers (deltastore.TableMerger):
+    # the first merge after a compaction pays one O(base) copy, every later
+    # write/read cycle appends only the delta tail — O(batch), not O(base).
     def vertex_table(self, label: str) -> Table:
         runs = self.delta.vertex_rows.get(label)
         if not runs:
             return self._base_vertex_tables[label]
-        if label not in self._merged_vt:
-            from . import deltastore
-            base = self._base_vertex_tables[label]
-            cols = {k: deltastore.concat_column(c, runs[k])
-                    for k, c in base.columns.items()}
-            self._merged_vt[label] = Table(base.name, cols)
-        return self._merged_vt[label]
+        from . import deltastore
+        merger = self._vt_mergers.get(label)
+        if merger is None:
+            merger = self._vt_mergers[label] = deltastore.TableMerger(
+                self._base_vertex_tables[label])
+        return merger.table(runs)
 
     @property
     def edges(self) -> Table:
@@ -470,12 +482,10 @@ class Graph:
         tid; tombstoned rows stay in place until compaction)."""
         if not self.delta.n_new_edges:
             return self._base_edges
-        if self._merged_edges is None:
-            from . import deltastore
-            cols = {k: deltastore.concat_column(c, self.delta.edge_rows[k])
-                    for k, c in self._base_edges.columns.items()}
-            self._merged_edges = Table(self._base_edges.name, cols)
-        return self._merged_edges
+        from . import deltastore
+        if self._edge_merger is None:
+            self._edge_merger = deltastore.TableMerger(self._base_edges)
+        return self._edge_merger.table(self.delta.edge_rows)
 
     # ---- mapping structures (paper §4.2) ----
     @property
@@ -611,7 +621,6 @@ class Graph:
         self.delta.buffer_vertices(label, cols, nids)
         self._vlc.append(np.full(n_new, self._label_code[label], dtype=np.int8))
         self._vvo.append(np.arange(vid0, vid0 + n_new, dtype=np.int64))
-        self._merged_vt.pop(label, None)
         self.epoch += 1
         WRITE_COUNTERS.write_batches += 1
         WRITE_COUNTERS.write_rows += n_new
@@ -636,7 +645,6 @@ class Graph:
         self.delta.buffer_edges(cols, seg)
         self._src_nid.append(src_nid)
         self._dst_nid.append(dst_nid)
-        self._merged_edges = None
         self.epoch += 1
         c = deltastore.WRITE_COUNTERS
         c.write_batches += 1

@@ -197,6 +197,20 @@ _FREE_OPS = {"get-tuple-element", "tuple", "bitcast", "parameter", "constant",
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 
+# operands appear either bare ("%name") or typed ("f32[2,3]{1,0} %name" in
+# newer XLA dumps); capture the inline type when present so shape lookups
+# don't depend on the defining line being in the same computation
+_OPERAND_RE = re.compile(r"(?:([a-z0-9]+\[[0-9,]*\])(?:\{[0-9,]*\})?\s+)?%([\w\.\-]+)")
+
+
+def _operands(line: str, opcode: str) -> list[tuple]:
+    """[(inline_type_or_None, name), ...] for one op's operand list."""
+    m = re.search(re.escape(opcode) + r"\(([^)]*)\)", line)
+    if not m:
+        return []
+    return [(t or None, n) for t, n in _OPERAND_RE.findall(m.group(1))]
+
+
 def _type_bytes(t: str) -> int:
     """bytes of 'f32[2,3]' or '(f32[2], s32[])'."""
     total = 0
@@ -289,13 +303,11 @@ def hlo_cost(hlo_text: str) -> dict:
                     byt += b_in
                 continue
             if opcode == "dot":
-                ops = re.findall(r"\(([^)]*)\)", line)
-                operands = [o.strip().lstrip("%") for o in
-                            (ops[0].split(",") if ops else [])]
+                opnds = _operands(line, opcode)
                 cm = _CONTRACT_RE.search(line)
                 contract = 1
-                if cm and operands:
-                    lhs_t = shapes.get(operands[0])
+                if cm and opnds:
+                    lhs_t = opnds[0][0] or shapes.get(opnds[0][1])
                     if lhs_t:
                         _, dims = _first_shape(lhs_t)
                         for ci in (cm.group(1).split(",") if cm.group(1) else []):
@@ -311,22 +323,27 @@ def hlo_cost(hlo_text: str) -> dict:
                 continue  # fusion internals don't touch HBM
             if opcode in _FREE_OPS:
                 continue
-            ops = re.findall(r"\(([^)]*)\)", line)
-            operand_names = [o.strip().lstrip("%") for o in
-                             (ops[0].split(",") if ops else []) if o.strip()]
+            opnds = _operands(line, opcode)
+
+            def _operand_type(i):
+                if i >= len(opnds):
+                    return None
+                return opnds[i][0] or shapes.get(opnds[i][1])
+
             if opcode in ("dynamic-slice", "gather", "slice"):
                 byt += 2 * _type_bytes(out_type)   # read slice + write
-            elif opcode == "dynamic-update-slice" and len(operand_names) > 1:
-                upd = shapes.get(operand_names[1])
+            elif opcode == "dynamic-update-slice" and len(opnds) > 1:
+                upd = _operand_type(1)
                 byt += 2 * (_type_bytes(upd) if upd else _type_bytes(out_type))
-            elif opcode == "scatter" and len(operand_names) > 2:
-                upd = shapes.get(operand_names[2])
+            elif opcode == "scatter" and len(opnds) > 2:
+                upd = _operand_type(2)
                 byt += 2 * (_type_bytes(upd) if upd else 0) + _type_bytes(out_type)
             else:
                 b = _type_bytes(out_type)
-                for o in operand_names:
-                    if o in shapes:
-                        b += _type_bytes(shapes[o])
+                for i in range(len(opnds)):
+                    t = _operand_type(i)
+                    if t:
+                        b += _type_bytes(t)
                 byt += b
         memo[name] = (flops, byt)
         return memo[name]

@@ -1,0 +1,268 @@
+"""Physical operator DAG: plan-shape snapshots per engine mode, operator-
+level inter-buffer reuse (structural plan matching at the node level), and
+the capacity-doubling incremental merged record views."""
+import numpy as np
+import pytest
+
+from repro.core import GredoEngine, physical
+from repro.core.schema import AnalyticsTask, GCDIATask
+from repro.core.storage import Graph, Table
+from repro.data import m2bench
+
+
+@pytest.fixture(scope="module")
+def db():
+    return m2bench.generate(sf=1)
+
+
+# ---------------------------------------------------------------------------
+# Plan-shape snapshots: explain(dag) golden strings per ablation mode
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    ("q_g1", "gredo"): """\
+Project[Customer.id, t.tid]
+  EquiJoin[Customer.person_id=p.pid]
+    Alias[Customer]
+      ScanTable[Customer]
+    GraphProject[Interested_in keep=p,t]
+      MatchPattern[Interested_in dir=rev hops=1 pushed=t:1 deferred=-]
+        SemiJoinMask[Persons.pid ∈ person_id]
+          ^shared:ScanTable[Customer]""",
+    ("q_g1", "dual"): """\
+Project[Customer.id, t.tid]
+  EquiJoin[Customer.person_id=p.pid]
+    Alias[Customer]
+      ScanTable[Customer]
+    GraphProject[Interested_in keep=e0,p,t]
+      MatchPattern[Interested_in dir=fwd hops=1 pushed=- deferred=t:1]""",
+    ("q_g1", "single"): """\
+Project[Customer.id, t.tid]
+  EquiJoin[Customer.person_id=p.pid]
+    Alias[Customer]
+      ScanTable[Customer]
+    GraphProject[Interested_in keep=e0,p,t]
+      TableJoinMatch[Interested_in hops=1]""",
+    ("q_g4", "gredo"): """\
+Project[Customer.id, t.tid]
+  EquiJoin[Customer.person_id=p.pid]
+    EquiJoin[Orders.customer_id=Customer.id]
+      EquiJoin[Product.id=Orders.product_id]
+        Alias[Product]
+          Select[Product.title == 'Yogurt']
+            ScanTable[Product]
+        Alias[Orders]
+          ScanTable[Orders]
+      Alias[Customer]
+        ScanTable[Customer]
+    GraphProject[Interested_in keep=p,t]
+      MatchPattern[Interested_in dir=rev hops=1 pushed=- deferred=-]
+        SemiJoinMask[Persons.pid ∈ person_id]
+          ^shared:ScanTable[Customer]""",
+    ("q_vertex_scan", "gredo"): """\
+Project[t.tid]
+  GraphProject[Interested_in keep=t]
+    VertexScan[Interested_in.t]""",
+    ("q_edge_scan", "gredo"): """\
+Project[e0.weight]
+  GraphProject[Interested_in keep=e0]
+    EdgeScan[Interested_in.e0]""",
+}
+
+
+@pytest.mark.parametrize("qname,mode", sorted(GOLDEN))
+def test_plan_shape_snapshot(db, qname, mode):
+    eng = GredoEngine(db, mode=mode)
+    q = getattr(m2bench, qname)()
+    assert eng.explain(q) == GOLDEN[(qname, mode)]
+
+
+def test_every_mode_executes_through_the_dag(db):
+    """All three ablation variants run the same executor: the DAG result
+    matches engine.query and per-operator stats are populated."""
+    q = m2bench.q_g1()
+    for mode in ("gredo", "dual", "single"):
+        eng = GredoEngine(db, mode=mode)
+        r = eng.query(q)
+        ops = [o["op"] for o in eng.last_stats.operators]
+        assert ops[0] == "Project" and "GraphProject" in ops
+        executed = [o for o in eng.last_stats.operators if o["executed"]]
+        assert executed and all(o["seconds"] >= 0 for o in executed)
+        assert r.nrows == eng.last_stats.operators[0]["rows"]
+
+
+def test_cost_estimates_cover_every_operator(db):
+    """§6.3 cost-model annotation: every node of every mode's plan gets a
+    finite, non-negative (est_rows, est_cost) pair, rendered by explain."""
+    for qname in ("q_g1", "q_g4", "q_vertex_scan", "q_edge_scan"):
+        q = getattr(m2bench, qname)()
+        for mode in ("gredo", "dual", "single"):
+            dag = GredoEngine(db, mode=mode).physical_plan(q)
+            ests = physical.estimate(dag, db)
+            assert ests and all(r >= 0 and c >= 0 and np.isfinite(r + c)
+                                for r, c in ests.values())
+            rendered = physical.explain(dag, db=db)
+            assert "est_cost=" in rendered and "est_rows=" in rendered
+
+
+def test_node_signatures_embed_epochs_and_structure(db):
+    eng = GredoEngine(db)
+    s1 = eng.physical_plan(m2bench.q_g1()).signature()
+    s2 = eng.physical_plan(m2bench.q_g1()).signature()
+    assert s1 == s2  # deterministic across builds
+    assert eng.physical_plan(m2bench.q_g2()).signature() != s1
+    # a different mode produces a structurally different plan
+    assert GredoEngine(db, mode="single").physical_plan(
+        m2bench.q_g1()).signature() != s1
+
+
+# ---------------------------------------------------------------------------
+# Operator-level inter-buffer reuse (§6.4 structural matching, per node)
+# ---------------------------------------------------------------------------
+
+
+def _task(op, inputs):
+    return GCDIATask(integration=m2bench.q_g1(),
+                     analytics=AnalyticsTask(op, inputs))
+
+
+def test_changed_analytics_op_reuses_gcdi_relation():
+    """A repeated GCDIA with a *different* analytics op (and different matrix
+    generation) skips GCDI re-execution: the shared GCDI root hits the
+    inter-buffer by node signature."""
+    db = m2bench.generate(sf=1)
+    eng = GredoEngine(db)
+    eng.analyze(_task("MULTIPLY", [("rel2matrix", ("Customer.id", "t.tid"))]))
+    assert eng.interbuffer.hits == 0
+    fetches_cold = eng.last_stats.record_fetches
+    assert fetches_cold > 0
+
+    eng.analyze(_task("SIMILARITY",
+                      [("random", "Customer.id", "t.tid", m2bench.N_TAGS)]))
+    assert eng.interbuffer.hits == 1          # hit at the GCDI Project node
+    assert eng.last_stats.record_fetches == 0  # GCDI never re-executed
+    by_op = {o["op"]: o for o in eng.last_stats.operators}
+    assert by_op["Project"]["cached"] and not by_op["Project"]["executed"]
+    assert not by_op["MatchPattern"]["executed"]
+    assert by_op["Similarity"]["executed"]
+    assert eng.last_stats.nodes_reused == 1
+    assert "interbuffer-hit" in eng.explain_last()
+
+
+def test_epoch_bump_invalidates_mid_plan_reuse():
+    db = m2bench.generate(sf=1)
+    eng = GredoEngine(db)
+    eng.analyze(_task("MULTIPLY", [("rel2matrix", ("Customer.id", "t.tid"))]))
+    db.graphs["Interested_in"].insert_edges(
+        {"svid": np.array([0]), "tvid": np.array([1]),
+         "weight": np.array([0.5])})
+    eng.analyze(_task("SIMILARITY",
+                      [("random", "Customer.id", "t.tid", m2bench.N_TAGS)]))
+    assert eng.interbuffer.hits == 0          # every signature changed
+    assert eng.last_stats.record_fetches > 0  # GCDI re-executed
+    by_op = {o["op"]: o for o in eng.last_stats.operators}
+    assert by_op["Project"]["executed"] and not by_op["Project"]["cached"]
+
+
+def test_identical_task_hits_at_the_root():
+    db = m2bench.generate(sf=1)
+    eng = GredoEngine(db)
+    t = _task("SIMILARITY", [("random", "Customer.id", "t.tid", m2bench.N_TAGS)])
+    out1 = eng.analyze(t)
+    out2 = eng.analyze(t)
+    assert eng.interbuffer.hits == 1
+    assert eng.last_stats.interbuffer_hit    # whole-result reuse at the root
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_shared_subplans_execute_once(db):
+    """The Customer scan feeds both the semi-join mask and the join cluster;
+    signature memoization must run it once per execution."""
+    eng = GredoEngine(db)
+    eng.query(m2bench.q_g1())
+    scans = [o for o in eng.last_stats.operators if o["op"] == "ScanTable"]
+    assert len(scans) == 1  # collect_stats reports shared nodes once
+
+
+# ---------------------------------------------------------------------------
+# Incremental merged record views (capacity-doubling column buffers)
+# ---------------------------------------------------------------------------
+
+
+def _small_graph():
+    from repro.core.deltastore import DeltaConfig
+    from repro.core.storage import DictColumn, RaggedColumn
+    rng = np.random.default_rng(0)
+    vt = Table("A", {"attr": rng.integers(0, 5, 10).astype(np.int64),
+                     "tag": DictColumn(values=[("x", "y")[i % 2] for i in range(10)]),
+                     "xs": RaggedColumn(lists=[[i, i + 1] for i in range(10)])})
+    edges = Table("E", {"svid": rng.integers(0, 10, 30).astype(np.int64),
+                        "tvid": rng.integers(0, 10, 30).astype(np.int64),
+                        "w": rng.uniform(0, 1, 30)})
+    return Graph("G", {"A": vt}, edges, "A", "A",
+                 delta_config=DeltaConfig(auto_compact=False))
+
+
+def test_merged_views_append_only_the_delta_tail():
+    g = _small_graph()
+    g.insert_edges({"svid": np.array([0]), "tvid": np.array([1]),
+                    "w": np.array([0.5])})
+    e1 = g.edges
+    merger = g._edge_merger
+    assert merger is not None and merger._cached_runs == 1
+    assert g.edges is e1                      # cached until the next write
+    g.insert_edges({"svid": np.array([2]), "tvid": np.array([3]),
+                    "w": np.array([0.7])})
+    e2 = g.edges
+    assert g._edge_merger is merger           # same buffers, tail appended
+    assert merger._cached_runs == 2
+    assert e2.nrows == 32
+    np.testing.assert_allclose(np.asarray(e2.col("w"))[-2:], [0.5, 0.7])
+    # base prefix identical to the first merged view
+    np.testing.assert_array_equal(np.asarray(e2.col("svid"))[:31],
+                                  np.asarray(e1.col("svid")))
+
+
+def test_merged_vertex_views_all_column_kinds():
+    g = _small_graph()
+    base_tags = list(g.vertex_tables["A"].col("tag").decode(
+        g.vertex_tables["A"].col("tag").codes))
+    g.insert_vertices("A", {"attr": np.array([7]), "tag": ["z"],
+                            "xs": [[99, 100]]})
+    g.insert_vertices("A", {"attr": np.array([8]), "tag": ["x"],
+                            "xs": [[]]})
+    vt = g.vertex_tables["A"]
+    assert vt.nrows == 12
+    assert list(np.asarray(vt.col("attr"))[-2:]) == [7, 8]
+    tags = list(vt.col("tag").decode(vt.col("tag").codes))
+    assert tags == base_tags + ["z", "x"]
+    assert len(vt.col("tag").vocab) == 3      # one genuinely new value
+    assert list(vt.col("xs").row(10)) == [99, 100]
+    assert list(vt.col("xs").row(11)) == []
+    # one merger per label, reused across write/read cycles
+    assert g._vt_mergers["A"]._cached_runs == 2
+
+
+def test_ragged_merge_promotes_float_into_int_values():
+    """np.concatenate semantics for ragged columns too: a float row into an
+    int-valued RaggedColumn must promote, not truncate."""
+    g = _small_graph()   # xs base values are ints
+    g.insert_vertices("A", {"attr": np.array([1]), "tag": ["x"],
+                            "xs": [[1.5, 2.5]]})
+    xs = g.vertex_tables["A"].col("xs")
+    assert np.asarray(xs.values).dtype.kind == "f"
+    np.testing.assert_allclose(xs.row(10), [1.5, 2.5])
+    np.testing.assert_allclose(xs.row(0), [0, 1])  # base rows intact
+
+
+def test_merged_views_survive_compaction_cycle():
+    g = _small_graph()
+    g.insert_edges({"svid": np.array([0, 1]), "tvid": np.array([1, 2]),
+                    "w": np.array([0.5, 0.6])})
+    before = np.asarray(g.edges.col("w")).copy()
+    g.compact()
+    assert g._edge_merger is None             # fresh base, merger reset
+    np.testing.assert_allclose(np.asarray(g.edges.col("w")), before)
+    g.insert_edges({"svid": np.array([3]), "tvid": np.array([4]),
+                    "w": np.array([0.9])})
+    assert g.edges.nrows == 33                # post-compaction merging works
