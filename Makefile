@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia
+.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer
 
 # tier-1 verification
 test:
@@ -15,10 +15,12 @@ test-fast:
 	python -m pytest -x -q tests/test_storage.py tests/test_deltastore.py \
 		tests/test_planner.py tests/test_system.py tests/test_oracle_equivalence.py
 
-# small-size benchmark pass (CI smoke): paper suite fast mode + update suite
+# small-size benchmark pass (CI smoke): paper suite fast mode + update +
+# optimizer suites
 bench-smoke:
 	python -m benchmarks.run --fast --sf 1
 	python -m benchmarks.run --suite update --fast
+	python -m benchmarks.run --suite optimizer --fast
 
 bench:
 	python -m benchmarks.run --sf 1
@@ -29,3 +31,7 @@ bench-update:
 # operator-level inter-buffer reuse (per-operator timings + hit rates)
 bench-gcdia:
 	python -m benchmarks.run --suite gcdia
+
+# cost-based optimizer: naive query-order DAG vs rewritten DAG latency
+bench-optimizer:
+	python -m benchmarks.run --suite optimizer --sf 2

@@ -1,0 +1,79 @@
+"""Cost-based optimizer benchmark: naive-order vs. optimized DAG latency.
+
+Runs each M2Bench-style multi-join query twice through the same engine
+path — once with the optimizer disabled (the naive query-order DAG the
+builder emits) and once with the full rewrite pass (join reordering,
+semi-join siding, CSE, selection/projection sink-down) — and reports the
+wall-clock ratio, the per-operator intermediate sizes, and the root
+est_rows vs. actual rows (plan-quality check).
+
+    PYTHONPATH=src python -m benchmarks.run --suite optimizer [--sf N]
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import GredoEngine, physical
+from repro.data import m2bench
+
+QUERIES = ("q_g1", "q_g2", "q_g4", "q_opt_skew")
+
+
+def _best_seconds(eng, q, repeat: int) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        eng.query(q)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _join_rows(eng) -> int:
+    """Total rows flowing out of EquiJoin operators — the intermediate-size
+    proxy that join reordering is supposed to shrink."""
+    return sum(o["rows"] or 0 for o in eng.last_stats.operators
+               if o["op"] == "EquiJoin" and o["rows"] is not None)
+
+
+def optimizer_gain(sf: int = 2, repeat: int = 5) -> list[dict]:
+    db = m2bench.generate(sf=sf)
+    rows: list[dict] = []
+    for qname in QUERIES:
+        q = getattr(m2bench, qname)()
+        naive_eng = GredoEngine(db, enable_optimizer=False)
+        opt_eng = GredoEngine(db)
+        n_rows = naive_eng.query(q).nrows
+        o_rows = opt_eng.query(q).nrows
+        assert n_rows == o_rows, f"optimizer changed {qname}: {n_rows} != {o_rows}"
+        naive_s = _best_seconds(naive_eng, q, repeat)
+        opt_s = _best_seconds(opt_eng, q, repeat)
+        root_est = opt_eng.last_ests[id(opt_eng.last_dag)][0]
+        report = opt_eng.last_report
+        rows.append({
+            "table": "optimizer_gain", "sf": sf, "query": qname,
+            "rows": n_rows,
+            "naive_s": naive_s, "opt_s": opt_s,
+            "speedup": naive_s / max(opt_s, 1e-9),
+            "naive_join_rows": _join_rows(naive_eng),
+            "opt_join_rows": _join_rows(opt_eng),
+            "est_root_rows": float(root_est),
+            "q_error_root": max(root_est / max(n_rows, 1),
+                                n_rows / max(root_est, 1e-9)),
+            "rewrites": report.notes() if report else [],
+        })
+    return rows
+
+
+def print_rows(rows: list[dict]) -> None:
+    import sys
+    for r in rows:
+        print(f"optimizer_{r['query']}_sf{r['sf']},{r['opt_s']*1e6:.1f},"
+              f"speedup_vs_naive={r['speedup']:.2f};"
+              f"join_rows={r['naive_join_rows']}->{r['opt_join_rows']};"
+              f"q_error_root={r['q_error_root']:.2f}")
+        for n in r["rewrites"]:
+            print(f"#   {n}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    print_rows(optimizer_gain())

@@ -36,11 +36,34 @@ def _gcdia_suite(sf: int) -> list[dict]:
     return rows
 
 
+def _optimizer_suite(sf: int, fast: bool) -> list[dict]:
+    """Cost-based optimizer: naive query-order DAG vs. rewritten DAG (join
+    reordering / semi-join siding / CSE / sink-down) on multi-join queries.
+    The rewrite overhead is ~1ms/query, so the latency win grows with --sf
+    (the Makefile's bench-optimizer target uses --sf 2)."""
+    from . import optimizer_bench
+    rows = optimizer_bench.optimizer_gain(sf=sf, repeat=2 if fast else 5)
+    optimizer_bench.print_rows(rows)
+    return rows
+
+
 def _save(all_rows: list[dict]) -> None:
+    """Merge into experiments/bench_results.json: rows of the tables just
+    measured replace their previous records; other suites' rows persist."""
     os.makedirs("experiments", exist_ok=True)
-    with open("experiments/bench_results.json", "w") as f:
-        json.dump(all_rows, f, indent=1, default=str)
-    print("# full records -> experiments/bench_results.json", file=sys.stderr)
+    path = "experiments/bench_results.json"
+    fresh_tables = {r.get("table") for r in all_rows}
+    kept: list[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                kept = [r for r in json.load(f)
+                        if r.get("table") not in fresh_tables]
+        except (ValueError, OSError):
+            kept = []
+    with open(path, "w") as f:
+        json.dump(kept + all_rows, f, indent=1, default=str)
+    print(f"# full records -> {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -48,12 +71,14 @@ def main() -> None:
     ap.add_argument("--sf", type=int, default=1)
     ap.add_argument("--fast", action="store_true",
                     help="skip the scale-factor sweep / use smoke sizes")
-    ap.add_argument("--suite", choices=("paper", "update", "gcdia", "all"),
+    ap.add_argument("--suite",
+                    choices=("paper", "update", "gcdia", "optimizer", "all"),
                     default="paper",
                     help="paper: GCDI/GCDA tables; update: write-path "
                          "throughput (delta store vs full rebuild); gcdia: "
                          "operator-level inter-buffer reuse (per-operator "
-                         "timings + hit rates)")
+                         "timings + hit rates); optimizer: naive-order vs "
+                         "cost-based rewritten DAG latency")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -61,6 +86,12 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     all_rows: list[dict] = []
+
+    if args.suite in ("optimizer", "all"):
+        all_rows += _optimizer_suite(sf=args.sf, fast=args.fast)
+        if args.suite == "optimizer":
+            _save(all_rows)
+            return
 
     if args.suite in ("gcdia", "all"):
         all_rows += _gcdia_suite(sf=args.sf)

@@ -23,8 +23,10 @@ def main():
     # 2. GCDI: "customers and the food tags their persons are interested in"
     q = m2bench.q_g1()
     plan = eng.plan(q)
-    print("\n--- optimizer plan ---")
+    print("\n--- logical plan ---")
     print(plan.explain())
+    print("\n--- physical plans (naive vs cost-based rewrite) ---")
+    print(eng.explain(q))
     result = eng.query(q)
     print(f"\nGCDI result: {result.nrows} rows, "
           f"{eng.last_stats.seconds*1e3:.1f} ms, "

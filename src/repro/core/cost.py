@@ -74,6 +74,34 @@ def cost_project(n: int, n_attrs: int) -> float:
     return n * max(n_attrs, 1) * (COST_IO + COST_CPU)
 
 
+def cost_semijoin(n_left: int, n_right: int) -> float:
+    """Semi-join reduction (Eq. 9/10 mask build): sort the smaller key set,
+    binary-probe the larger — no output expansion."""
+    nl, nr = max(n_left, 1), max(n_right, 1)
+    small = min(nl, nr)
+    return (small * np.log2(max(small, 2)) + nl + nr) * COST_CPU
+
+
+# ---- matrix generation + analytical operator costs (GCDA, Eq. 5/6) ---------
+
+def cost_matrix_gen(n: int, k: int) -> float:
+    """REL2MATRIX / random access: one gather+scatter per (row, feature)."""
+    return n * max(k, 1) * (COST_IO + COST_CPU)
+
+
+def cost_matmul(n: int, k: int, m: int) -> float:
+    return float(n) * max(k, 1) * max(m, 1) * COST_CPU
+
+
+def cost_similarity(n: int, k: int, m: int) -> float:
+    # normalize both sides + one (n, m) score matmul
+    return (n + m) * max(k, 1) * COST_CPU + cost_matmul(n, k, m)
+
+
+def cost_regression(n: int, k: int, iters: int) -> float:
+    return 2.0 * float(iters) * cost_matmul(n, k, 1)
+
+
 # ---- cross-model join cost (Eq. 14-16) ---------------------------------------
 
 BLOCK_RECORDS = 1024  # b: records per block (vector register tile analogue)

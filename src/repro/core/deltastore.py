@@ -281,13 +281,15 @@ class ColumnMerger:
     the merge is O(delta), not O(base), per cycle."""
 
     def __init__(self, base):
-        from .storage import DictColumn, RaggedColumn
+        from .storage import DictColumn, RaggedColumn, compute_stats
         self.n_runs = 0
         if isinstance(base, DictColumn):
             self.kind = "dict"
             self.codes = Growable(base.codes)
             self.vocab = Growable(np.asarray(list(base.vocab), dtype=object))
             self.index = {v: i for i, v in enumerate(base.vocab)}
+            self.counts = Growable(np.bincount(
+                base.codes, minlength=len(base.vocab)).astype(np.int64))
         elif isinstance(base, RaggedColumn):
             self.kind = "ragged"
             self.values = Growable(np.asarray(base.values))
@@ -295,6 +297,11 @@ class ColumnMerger:
         else:
             self.kind = "array"
             self.buf = Growable(np.asarray(base))
+            arr = np.asarray(base)
+            # incremental §6.3 stats ride along for numeric columns: each
+            # absorbed run extends min/max/histogram/NDV in O(batch), so the
+            # optimizer sees fresh statistics without an O(base) recompute
+            self.stats = compute_stats(arr) if arr.dtype.kind in "ifu" else None
 
     def absorb(self, runs: list) -> None:
         """Fold runs[n_absorbed:] into the buffers (the delta tail only)."""
@@ -305,6 +312,8 @@ class ColumnMerger:
                 new_codes, fresh = encode_batch(vals, self.index, self.vocab.n)
                 if fresh:
                     self.vocab.append(np.asarray(fresh, dtype=object))
+                    self.counts.append(np.zeros(len(fresh), dtype=np.int64))
+                np.add.at(self.counts.view(), new_codes, 1)
                 self.codes.append(new_codes)
             elif self.kind == "ragged":
                 rows = [np.asarray(row) for row in r]
@@ -319,7 +328,22 @@ class ColumnMerger:
                 run = np.asarray(r)
                 self.buf = _promote(self.buf, run.dtype)
                 self.buf.append(run)
+                if self.stats is not None and run.dtype.kind in "ifu":
+                    self.stats.extend_numeric(run)
+                else:
+                    self.stats = None   # non-numeric append: fall back to lazy
         self.n_runs = len(runs)
+
+    def stats_view(self):
+        """Current ColumnStats maintained across absorbs, or None when the
+        column kind falls back to lazy recomputation (ragged columns)."""
+        from .storage import dict_stats
+        if self.kind == "dict":
+            return dict_stats(self.codes.n, self.vocab.view(),
+                              self.counts.view())
+        if self.kind == "array":
+            return self.stats
+        return None
 
     def view(self):
         from .storage import DictColumn, RaggedColumn
@@ -352,6 +376,12 @@ class TableMerger:
             m.absorb(runs.get(k, []))
         self._cached = Table(self.name,
                              {k: m.view() for k, m in self.mergers.items()})
+        # hand the incrementally-maintained stats to the merged view, so
+        # Table.stats() on a base ⊕ delta table is O(1) instead of O(rows)
+        for k, m in self.mergers.items():
+            s = m.stats_view()
+            if s is not None:
+                self._cached._stats[k] = s
         self._cached_runs = n_runs
         return self._cached
 

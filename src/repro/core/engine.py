@@ -23,7 +23,8 @@ from typing import Optional
 
 import numpy as np
 
-from . import join as join_mod, pattern as pattern_mod, physical, planner
+from . import join as join_mod, optimizer as optimizer_mod
+from . import pattern as pattern_mod, physical, planner
 from .interbuffer import InterBuffer
 from .schema import GCDIATask, Query
 from .storage import Database, Table
@@ -43,6 +44,8 @@ class ExecStats:
     # per-operator rows/bytes/seconds of the executed physical DAG
     # (pre-order; see physical.collect_stats)
     operators: list = dataclasses.field(default_factory=list)
+    # optimizer rewrite log (join reordering, semi-join siding, CSE, ...)
+    rewrites: list = dataclasses.field(default_factory=list)
     # inter-buffer reuse below the root: # of DAG nodes satisfied from cache
     nodes_reused: int = 0
     # write-path observability: pending-delta state of the matched graph
@@ -54,13 +57,30 @@ class ExecStats:
 
 class GredoEngine:
     def __init__(self, db: Database, mode: str = "gredo",
-                 interbuffer_bytes: int = 2 << 30):
+                 interbuffer_bytes: int = 2 << 30,
+                 enable_optimizer: bool = True,
+                 admit_cost_per_byte: float = 0.05):
         assert mode in ("gredo", "dual", "single")
         self.db = db
         self.mode = mode
-        self.interbuffer = InterBuffer(interbuffer_bytes)
+        self.enable_optimizer = enable_optimizer
+        self.interbuffer = InterBuffer(interbuffer_bytes,
+                                       admit_cost_per_byte=admit_cost_per_byte)
         self.last_stats: Optional[ExecStats] = None
         self.last_dag: Optional[physical.PhysicalOp] = None
+        self.last_naive_dag: Optional[physical.PhysicalOp] = None
+        self._last_ests: Optional[dict] = None
+        self.last_report: Optional[optimizer_mod.OptReport] = None
+
+    @property
+    def last_ests(self) -> Optional[dict]:
+        """§6.3 estimates of the most recent DAG, computed lazily — GCDI
+        queries don't pay the estimate walk unless explain_last (or a
+        caller) actually reads it. analyze() fills it eagerly because the
+        inter-buffer admission consumes the estimates during execution."""
+        if self._last_ests is None and self.last_dag is not None:
+            self._last_ests = physical.estimate(self.last_dag, self.db)
+        return self._last_ests
 
     # ------------------------------------------------------------------ GCDI
     def plan(self, q: Query) -> planner.GCDIPlan:
@@ -69,38 +89,87 @@ class GredoEngine:
                             enable_pattern_pushdown=enable_opt)
 
     def physical_plan(self, q: Query) -> physical.PhysicalOp:
-        """Lower a GCDI task to its physical operator DAG (unexecuted)."""
+        """Lower a GCDI task to its *naive* physical DAG (pre-rewrite)."""
         return physical.build_gcdi(self.db, self.plan(q), mode=self.mode)
+
+    def optimized_plan(self, q: Query) -> physical.PhysicalOp:
+        """The DAG the engine actually executes (post-rewrite in gredo
+        mode; identical to ``physical_plan`` otherwise). Updates the whole
+        ``last_*`` family consistently, so a following ``explain_last``
+        describes this plan (unexecuted: estimates only, no actuals)."""
+        naive = self.physical_plan(q)
+        dag, report = self._lower(naive)
+        self.last_dag = dag
+        self.last_naive_dag = naive
+        self.last_report = report
+        self._last_ests = None
+        return dag
+
+    def _lower(self, dag: physical.PhysicalOp):
+        """Apply the cost-based optimizer in full-system mode. The ablation
+        variants (-D / -S) run the naive DAG, as in the paper."""
+        if self.mode == "gredo" and self.enable_optimizer:
+            return optimizer_mod.optimize(dag, self.db)
+        return dag, None
 
     def query(self, q: Query) -> Table:
         traversal.COUNTERS.reset()
         t0 = time.perf_counter()
         p = self.plan(q)
-        dag = physical.build_gcdi(self.db, p, mode=self.mode)
+        naive = physical.build_gcdi(self.db, p, mode=self.mode)
+        dag, report = self._lower(naive)
         ctx = physical.ExecContext(self.db)
         result = physical.execute(dag, ctx)
         notes = list(p.notes)
         if self.mode == "single" and q.match is not None:
             notes.insert(0, "single-engine: match via edge-table equi-joins")
         self.last_dag = dag
+        self.last_naive_dag = naive
+        self.last_report = report
+        self._last_ests = None
         self.last_stats = ExecStats(
             plan_notes=notes, seconds=time.perf_counter() - t0,
             record_fetches=traversal.COUNTERS.record_fetches,
             cpu_ops=traversal.COUNTERS.cpu_ops,
-            operators=physical.collect_stats(dag))
+            operators=physical.collect_stats(dag),
+            rewrites=report.notes() if report else [])
         self._attach_delta_stats(q)
         return result
 
     def explain(self, q: Query) -> str:
-        """Operator-DAG rendering of the plan for ``q`` (plan shape only;
-        run the query and use ``explain_last`` for per-operator stats)."""
-        return physical.explain(self.physical_plan(q))
+        """Pre- and post-rewrite operator DAGs with §6.3 estimates per
+        operator (run the query and use ``explain_last`` for est_rows next
+        to actual rows)."""
+        naive = self.physical_plan(q)
+        dag, report = self._lower(naive)
+        if report is None:
+            return physical.explain(naive, db=self.db)
+        lines = ["== naive DAG (pre-rewrite) ==",
+                 physical.explain(naive, db=self.db),
+                 "== optimized DAG (post-rewrite) ==",
+                 physical.explain(dag, db=self.db),
+                 "== rewrites =="]
+        lines += ["  " + n for n in report.notes()]
+        return "\n".join(lines)
 
     def explain_last(self) -> str:
-        """Per-operator rows/bytes/seconds of the most recent execution."""
+        """Pre/post-rewrite plans of the most recent execution, the executed
+        DAG annotated with actual rows/bytes/seconds *and* the cost-model
+        est_rows/est_cost per operator, plus inter-buffer counters."""
         if self.last_dag is None:
             return "(nothing executed yet)"
-        return physical.explain(self.last_dag, stats=True)
+        lines = []
+        if self.last_naive_dag is not None and self.last_report is not None:
+            lines += ["== naive DAG (pre-rewrite) ==",
+                      physical.explain(self.last_naive_dag, db=self.db),
+                      "== executed DAG (post-rewrite, actual vs. estimated) =="]
+        lines.append(physical.explain(self.last_dag, stats=True,
+                                      ests=self.last_ests))
+        if self.last_report is not None:
+            lines.append("== rewrites ==")
+            lines += ["  " + n for n in self.last_report.notes()]
+        lines.append(f"interbuffer: {self.interbuffer.counters()}")
+        return "\n".join(lines)
 
     def _attach_delta_stats(self, q: Query) -> None:
         if q.match is not None and self.last_stats is not None:
@@ -119,17 +188,24 @@ class GredoEngine:
         traversal.COUNTERS.reset()
         t0 = time.perf_counter()
         p = self.plan(task.integration)
-        dag = physical.build_gcdia(self.db, p, task, mode=self.mode,
-                                   use_kernel=use_kernel, iters=iters)
-        ctx = physical.ExecContext(self.db, interbuffer=self.interbuffer)
+        naive = physical.build_gcdia(self.db, p, task, mode=self.mode,
+                                     use_kernel=use_kernel, iters=iters)
+        dag, report = self._lower(naive)
+        ests = physical.estimate(dag, self.db)
+        ctx = physical.ExecContext(self.db, interbuffer=self.interbuffer,
+                                   ests=ests)
         out = physical.execute(dag, ctx)
         self.last_dag = dag
+        self.last_naive_dag = naive
+        self.last_report = report
+        self._last_ests = ests
         self.last_stats = ExecStats(
             plan_notes=list(p.notes), seconds=time.perf_counter() - t0,
             record_fetches=traversal.COUNTERS.record_fetches,
             cpu_ops=traversal.COUNTERS.cpu_ops,
             interbuffer_hit=dag.stats.cached,
             operators=physical.collect_stats(dag),
+            rewrites=report.notes() if report else [],
             nodes_reused=ctx.nodes_reused)
         self._attach_delta_stats(task.integration)
         return out

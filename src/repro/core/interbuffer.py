@@ -48,15 +48,25 @@ class InterBuffer:
     """LRU over an :class:`OrderedDict` (MRU at the end). Re-putting an
     existing key replaces it in place (no duplicate order entries), and
     eviction may drop every entry — a single matrix larger than the capacity
-    is not retained."""
+    is not retained.
 
-    def __init__(self, capacity_bytes: int = 2 << 30):
+    Admission is cost-aware: a put carrying an ``est_cost`` (the §6.3
+    estimated recompute cost of the producing sub-plan) is only admitted
+    when that cost exceeds a footprint-scaled threshold
+    (``admit_cost_per_byte`` cost units per resident byte) — cheap-to-
+    recompute bulky intermediates bypass the cache instead of evicting
+    expensive ones. Puts without an estimate are always admitted."""
+
+    def __init__(self, capacity_bytes: int = 2 << 30,
+                 admit_cost_per_byte: float = 0.0):
         self.capacity_bytes = capacity_bytes
+        self.admit_cost_per_byte = admit_cost_per_byte
         self._store: OrderedDict[str, jax.Array] = OrderedDict()
         self._nbytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.bypasses = 0
 
     def get(self, key: str):
         mat = self._store.get(key)
@@ -67,9 +77,17 @@ class InterBuffer:
         self.misses += 1
         return None
 
-    def put(self, key: str, mat):
+    def admits(self, nbytes: int, est_cost: Optional[float]) -> bool:
+        if est_cost is None or self.admit_cost_per_byte <= 0:
+            return True
+        return est_cost >= self.admit_cost_per_byte * max(nbytes, 1)
+
+    def put(self, key: str, mat, est_cost: Optional[float] = None):
         if not hasattr(mat, "columns"):   # matrices live on device; Tables as-is
             mat = jnp.asarray(mat)
+        if not self.admits(value_nbytes(mat), est_cost):
+            self.bypasses += 1
+            return mat
         old = self._store.pop(key, None)
         if old is not None:
             self._nbytes -= value_nbytes(old)
@@ -77,6 +95,12 @@ class InterBuffer:
         self._nbytes += value_nbytes(mat)
         self._evict()
         return mat
+
+    def counters(self) -> str:
+        """One-line hit/bypass accounting for explain output."""
+        return (f"hits={self.hits} misses={self.misses} "
+                f"bypasses={self.bypasses} evictions={self.evictions} "
+                f"entries={len(self)} bytes={self._nbytes}")
 
     def nbytes(self) -> int:
         return self._nbytes

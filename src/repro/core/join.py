@@ -68,6 +68,20 @@ def join_tables(left: Table, right: Table, pred: JoinPred,
     return Table(f"{left.name}⋈{right.name}", cols)
 
 
+def member_mask(tbl: Table, col: str, keys: np.ndarray) -> np.ndarray:
+    """Boolean mask over ``tbl`` rows whose ``col`` value appears in ``keys``
+    (ANY semantics for ragged columns). The shared probe of both semi-join
+    sidings: graph-side candidate masks and table-side reductions."""
+    tk, trows = _key_arrays(tbl, col)
+    traversal.COUNTERS.cpu_ops += len(tk) + len(keys)
+    keys_u = np.unique(np.asarray(keys))
+    hit = np.zeros(tbl.nrows, dtype=bool)
+    if len(keys_u):
+        pos = np.clip(np.searchsorted(keys_u, tk), 0, len(keys_u) - 1)
+        np.logical_or.at(hit, trows, keys_u[pos] == tk)
+    return hit
+
+
 def semi_join_graph(g: Graph, label: str, vcol: str, other: Table, ocol: str
                     ) -> np.ndarray:
     """Strategy 2 (Lines 4-12): graph ⋈̂ rel/doc. Returns the boolean mask of
@@ -75,18 +89,18 @@ def semi_join_graph(g: Graph, label: str, vcol: str, other: Table, ocol: str
     updated vertex record set V of the output graph. The topology is shared
     (candidate-set semantics), which is what enables join pushdown into the
     match (Eq. 9/10)."""
-    vt = g.vertex_tables[label]
-    vk, vrows = _key_arrays(vt, vcol)
     ok, _ = _key_arrays(other, ocol)
-    traversal.COUNTERS.cpu_ops += len(vk) + len(ok)
-    ok_u = np.unique(ok)
-    hit = np.zeros(vt.nrows, dtype=bool)
-    pos = np.searchsorted(ok_u, vk)
-    pos = np.clip(pos, 0, len(ok_u) - 1)
-    ok_nonempty = len(ok_u) > 0
-    match = (ok_u[pos] == vk) if ok_nonempty else np.zeros(len(vk), dtype=bool)
-    np.logical_or.at(hit, vrows, match)
-    return hit
+    return member_mask(g.vertex_tables[label], vcol, ok)
+
+
+def semi_join_table(tbl: Table, col: str, g: Graph, label: str, vcol: str
+                    ) -> np.ndarray:
+    """The reverse siding of the Eq. 9/10 semi-join: boolean mask of *table*
+    rows whose ``col`` appears among the graph's ``label.vcol`` vertex keys.
+    Reduces the relational/document side before the final equi-join when the
+    vertex key set is the smaller build input."""
+    vk, _ = _key_arrays(g.vertex_tables[label], vcol)
+    return member_mask(tbl, col, vk)
 
 
 def match_by_joins(g: Graph, pat) -> Table:
@@ -134,12 +148,5 @@ def match_by_joins(g: Graph, pat) -> Table:
 
 def semi_join_graph_edges(g: Graph, ecol: str, other: Table, ocol: str) -> np.ndarray:
     """graph ⋈̂ rel/doc over edge records: boolean mask of edges."""
-    ek, erows = _key_arrays(g.edges, ecol)
     ok, _ = _key_arrays(other, ocol)
-    traversal.COUNTERS.cpu_ops += len(ek) + len(ok)
-    ok_u = np.unique(ok)
-    hit = np.zeros(g.edges.nrows, dtype=bool)
-    if len(ok_u):
-        pos = np.clip(np.searchsorted(ok_u, ek), 0, len(ok_u) - 1)
-        np.logical_or.at(hit, erows, ok_u[pos] == ek)
-    return hit
+    return member_mask(g.edges, ecol, ok)

@@ -1,0 +1,443 @@
+"""Cost-based optimizer: stats-driven rewrites of the physical operator DAG.
+
+Sits between the planner and the executor. ``planner.plan`` makes the
+*logical* decisions (predicate assignment and pushdown, match trimming,
+projection trimming), ``physical.build_gcdi`` lowers them to a *naive* DAG
+(clusters join in query order, graph↔table joins stay post-match), and
+:func:`optimize` is the single physical rewrite pass:
+
+1. **Selection sink-down** — residual σ predicates move below the joins,
+   into the ``Select`` above the owning ``ScanTable`` (or onto the graph
+   cluster), so joins see fewer rows.
+2. **Column pruning** — base-table columns never referenced above the scan
+   (projection, join keys, residual predicates) are dropped right after the
+   pushed selections (projection sink-down into the scan).
+3. **Semi-join siding (Eq. 8 → 9/10)** — for each candidate graph↔table
+   join the §6.3 cost model compares three sidings: keep the post-match
+   equi-join, mask the graph's candidate vertices (``SemiJoinMask`` into
+   ``MatchPattern``), or reduce the table by the vertex keys
+   (``SemiJoinReduce``) — build on the smaller input.
+4. **Join reordering** — EquiJoin clusters re-merge greedily,
+   smallest-estimated-intermediate first, using NDV-based join cardinality
+   (``physical.est_join_rows``); the smaller side of every join becomes the
+   build (right) side of the sort-merge.
+5. **Common-subexpression elimination** — structurally identical subtrees
+   (equal node signatures) collapse to one shared node, so the DAG walks,
+   caches, and reports them once.
+
+All rewrites are plan-equivalence preserving: selections and semi-joins
+commute with equi-joins, and equi-joins commute/associate. The estimates
+come from the live column statistics (NDV, equi-width histograms, MCV
+counts) via :func:`physical.estimate`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from . import physical as ph
+from .planner import _graph_join_side
+from .storage import Database
+
+
+@dataclasses.dataclass
+class OptReport:
+    """What the rewrite pass did, plus the §6.3 cost totals before/after."""
+
+    rewrites: list = dataclasses.field(default_factory=list)
+    est_cost_before: float = 0.0
+    est_cost_after: float = 0.0
+
+    def add(self, rule: str, detail: str) -> None:
+        self.rewrites.append(f"{rule}: {detail}")
+
+    def notes(self) -> list:
+        out = list(self.rewrites)
+        out.append(f"est_cost {self.est_cost_before:.3g} -> "
+                   f"{self.est_cost_after:.3g}")
+        return out
+
+
+def optimize(root: ph.PhysicalOp, db: Database
+             ) -> tuple[ph.PhysicalOp, OptReport]:
+    """Rewrite a physical DAG (GCDI or full GCDIA) against the §6.3 cost
+    model. Returns ``(new_root, report)``; the input DAG is not mutated."""
+    report = OptReport()
+    cache: dict = {}    # shared estimate memo across the rewrite passes
+    report.est_cost_before = _est_cost(root, db, cache)
+    proj = _find_kind(root, ph.Project)
+    if proj is not None and getattr(proj, "logical", None) is not None:
+        new_proj = _optimize_gcdi(proj, db, report, cache)
+        if new_proj is not proj:
+            root = _replace(root, {id(proj): new_proj})
+    root, merged = _cse(root)
+    if merged:
+        report.add("cse", f"unified {merged} duplicate subtree(s)")
+    report.est_cost_after = _est_cost(root, db, cache)
+    return root, report
+
+
+# ---------------------------------------------------------------------------
+# DAG surgery helpers
+# ---------------------------------------------------------------------------
+
+
+def _find_kind(node: ph.PhysicalOp, cls) -> Optional[ph.PhysicalOp]:
+    if isinstance(node, cls):
+        return node
+    for c in node.children:
+        hit = _find_kind(c, cls)
+        if hit is not None:
+            return hit
+    return None
+
+
+def _replace(node: ph.PhysicalOp, mapping: dict) -> ph.PhysicalOp:
+    """Memoized rebuild substituting ``mapping[id(old)] -> new`` subtrees;
+    shared nodes stay shared."""
+    memo = dict(mapping)
+
+    def walk(n: ph.PhysicalOp) -> ph.PhysicalOp:
+        if id(n) in memo:
+            return memo[id(n)]
+        kids = tuple(walk(c) for c in n.children)
+        out = n if all(a is b for a, b in zip(kids, n.children)) \
+            else n.with_children(*kids)
+        memo[id(n)] = out
+        return out
+
+    return walk(node)
+
+
+def _cse(root: ph.PhysicalOp) -> tuple[ph.PhysicalOp, int]:
+    """Collapse structurally identical subtrees (same signature) into one
+    shared node instance, bottom-up. Already-shared nodes are walked once
+    (per-object memo), so ``merged`` counts genuine duplicates only."""
+    seen: dict = {}     # signature -> canonical node
+    memo: dict = {}     # id(original) -> rewritten/canonical node
+    merged = 0
+
+    def walk(n: ph.PhysicalOp) -> ph.PhysicalOp:
+        nonlocal merged
+        if id(n) in memo:
+            return memo[id(n)]
+        kids = tuple(walk(c) for c in n.children)
+        cand = n if all(a is b for a, b in zip(kids, n.children)) \
+            else n.with_children(*kids)
+        sig = cand.signature()
+        if sig in seen:
+            if seen[sig] is not cand:
+                merged += 1
+            cand = seen[sig]
+        else:
+            seen[sig] = cand
+        memo[id(n)] = cand
+        return cand
+
+    return walk(root), merged
+
+
+def _est_rows(node: ph.PhysicalOp, db: Database, cache: dict) -> float:
+    return ph.estimate(node, db, _cache=cache)[id(node)][0]
+
+
+def _est_cost(node: ph.PhysicalOp, db: Database, cache: dict) -> float:
+    return ph.estimate(node, db, _cache=cache)[id(node)][1]
+
+
+# ---------------------------------------------------------------------------
+# The GCDI rewrite pipeline (runs on the Project subtree)
+# ---------------------------------------------------------------------------
+
+
+def _optimize_gcdi(proj: ph.PhysicalOp, db: Database,
+                   report: OptReport, cache: dict) -> ph.PhysicalOp:
+    p = proj.logical
+    q = p.query
+    pattern = q.match
+
+    node = proj.children[0]
+    residual = []
+    if isinstance(node, ph.Residual):
+        residual = list(node.preds)
+        node = node.children[0]
+
+    # -- extract the join tree: cluster leaves + the full join predicate set
+    leaves: list[ph.PhysicalOp] = []
+
+    def collect(n: ph.PhysicalOp) -> None:
+        if isinstance(n, (ph.EquiJoin, ph.IntraFilter)):
+            for c in n.children:
+                collect(c)
+        else:
+            leaves.append(n)
+
+    collect(node)
+
+    # -- pass 1: selection sink-down --------------------------------------
+    leaves, residual = _sink_selections(leaves, residual, report)
+
+    # -- pass 2: column pruning (projection sink-down into the scans) ------
+    leaves = _prune_columns(leaves, db, q, residual, report)
+
+    # -- pass 3: cost-based semi-join siding (Eq. 8 -> 9/10) ---------------
+    if pattern is not None and p.semi_join_idx:
+        leaves = _side_semi_joins(leaves, db, p, report, cache)
+
+    # -- pass 4: greedy join reordering ------------------------------------
+    current = _reorder_joins(leaves, db, q, pattern, residual, report, cache)
+
+    if residual:
+        current = ph.Residual(residual, current)
+    return proj.with_children(current)
+
+
+def _leaf_cols(leaf: ph.PhysicalOp) -> frozenset:
+    return getattr(leaf, "out_cols", frozenset())
+
+
+def _table_leaf(leaf: ph.PhysicalOp) -> Optional[ph.Alias]:
+    return leaf if isinstance(leaf, ph.Alias) else None
+
+
+def _sink_selections(leaves: list, residual: list, report: OptReport
+                     ) -> tuple[list, list]:
+    """Move residual σ predicates below the joins: into the Select above the
+    owning table scan, or as a filter on the owning cluster."""
+    leaves = list(leaves)
+    kept: list = []
+    for pred in residual:
+        target = None
+        for li, leaf in enumerate(leaves):
+            if ph._static_has_col(_leaf_cols(leaf), pred.attr):
+                target = li
+                break
+        if target is None:
+            kept.append(pred)
+            continue
+        leaf = leaves[target]
+        alias = _table_leaf(leaf)
+        if alias is not None and pred.collection == alias.name:
+            inner = alias.children[0]
+            if isinstance(inner, ph.Select):
+                inner = ph.Select(inner.children[0], list(inner.preds) + [pred])
+            else:
+                inner = ph.Select(inner, [pred])
+            new_leaf = alias.with_children(inner)
+            report.add("sink-down", f"{pred!r} -> Select[{alias.name}]")
+        else:
+            new_leaf = ph.Residual([pred], leaf)
+            new_leaf.out_cols = _leaf_cols(leaf)
+            report.add("sink-down", f"{pred!r} -> {leaf.kind} cluster")
+        leaves[target] = new_leaf
+    return leaves, kept
+
+
+def _needed_columns(q, coll: str, residual: list) -> set:
+    """Bare column names of ``coll`` referenced above its scan."""
+    need: set = set()
+    for a in q.select:
+        c, _, col = a.partition(".")
+        if c == coll and col:
+            need.add(col)
+    for jp in q.joins:
+        for side in (jp.left, jp.right):
+            c, _, col = side.partition(".")
+            if c == coll and col:
+                need.add(col)
+    for pred in residual:
+        if pred.collection == coll:
+            need.add(pred.column)
+    return need
+
+
+def _prune_columns(leaves: list, db: Database, q, residual: list,
+                   report: OptReport) -> list:
+    leaves = list(leaves)
+    for li, leaf in enumerate(leaves):
+        alias = _table_leaf(leaf)
+        if alias is None or alias.name not in db.tables:
+            continue
+        have = set(db.tables[alias.name].columns)
+        need = _needed_columns(q, alias.name, residual) & have
+        if not need or need >= have:
+            continue
+        pruned = ph.PruneCols(alias.children[0], tuple(sorted(need)))
+        leaves[li] = alias.with_children(pruned)
+        report.add("prune", f"{alias.name}: keep {sorted(need)} "
+                            f"of {len(have)} column(s)")
+    return leaves
+
+
+def _side_semi_joins(leaves: list, db: Database, p, report: OptReport,
+                     cache: dict) -> list:
+    """Eq. 8 -> 9/10 with cost-based *siding*: per candidate graph↔table
+    join, compare (A) post-match join only, (B) graph-side candidate mask,
+    (C) table-side reduction by vertex keys — apply the cheapest."""
+    from . import cost as cost_mod
+
+    q = p.query
+    pattern = q.match
+    g = db.graphs[pattern.graph]
+    gep = db.epoch_of(pattern.graph)
+    vset = {v.var for v in pattern.vertices}
+
+    graph_i = next((i for i, l in enumerate(leaves)
+                    if _find_kind(l, ph.MatchPattern) is not None), None)
+    if graph_i is None:
+        return leaves
+    leaves = list(leaves)
+
+    for i in sorted(p.semi_join_idx):
+        jp = q.joins[i]
+        side = _graph_join_side(q, vset, jp)
+        if side is None:
+            continue
+        tbl_attr, var_attr = side
+        tcoll, tcol = tbl_attr.split(".", 1)
+        vvar, vcol = var_attr.split(".", 1)
+        label = pattern.vertex(vvar).label
+        tbl_i = next((ti for ti, l in enumerate(leaves)
+                      if _table_leaf(l) is not None
+                      and _table_leaf(l).name == tcoll), None)
+        if tbl_i is None:
+            continue
+        alias = leaves[tbl_i]
+        tbl_subtree = alias.children[0]
+        mp = _find_kind(leaves[graph_i], ph.MatchPattern)
+
+        def mp_cost_excl_tables(node: ph.MatchPattern) -> float:
+            """Match cost with every mask's *table* subtree excluded — the
+            table scans execute once under any siding (they feed the final
+            equi-joins regardless), so no option gets charged for them."""
+            c = _est_cost(node, db, cache)
+            seen: set = set()
+            for m in node.children:
+                t = m.children[0]
+                if id(t) not in seen:   # shared subtrees are counted once
+                    seen.add(id(t))
+                    c -= _est_cost(t, db, cache)
+            return c
+
+        n_t = _est_rows(tbl_subtree, db, cache)
+        est_match = _est_rows(mp, db, cache)
+
+        # (A) keep the post-match equi-join
+        cost_a = mp_cost_excl_tables(mp) + cost_mod.cost_join(est_match, n_t)
+
+        # (B) graph-side mask shrinking the candidate vertex set
+        mask = ph.SemiJoinMask(pattern.graph, gep, label, vcol, tcol,
+                               tbl_subtree)
+        mask.ocol_src = ("table", tcoll, tcol)
+        mp_b = mp.with_children(*mp.children, mask)
+        mp_b.mask_vars = tuple(mp.mask_vars) + (vvar,)
+        est_match_b = _est_rows(mp_b, db, cache)
+        cost_b = (mp_cost_excl_tables(mp_b)
+                  + cost_mod.cost_join(est_match_b, n_t))
+
+        # (C) table-side reduction by the vertex keys
+        reduce_node = ph.SemiJoinReduce(pattern.graph, gep, label, vcol,
+                                        tcol, tbl_subtree)
+        reduce_node.ocol_src = ("table", tcoll, tcol)
+        n_t_c = _est_rows(reduce_node, db, cache)
+        cost_c = (mp_cost_excl_tables(mp)
+                  + _est_cost(reduce_node, db, cache)
+                  - _est_cost(tbl_subtree, db, cache)
+                  + cost_mod.cost_join(est_match, n_t_c))
+
+        best = min(cost_a, cost_b, cost_c)
+        if best == cost_b:
+            leaves[graph_i] = _replace(leaves[graph_i], {id(mp): mp_b})
+            report.add("semi-join", f"join#{i} ({jp}): graph-side mask on "
+                       f"{vvar} — cost {cost_b:.3g} < post-match {cost_a:.3g}")
+        elif best == cost_c:
+            leaves[tbl_i] = alias.with_children(reduce_node)
+            report.add("semi-join", f"join#{i} ({jp}): table-side reduce of "
+                       f"{tcoll} — cost {cost_c:.3g} < post-match {cost_a:.3g}")
+        else:
+            report.add("semi-join", f"join#{i} ({jp}): kept post-match "
+                       f"(cost {cost_a:.3g} <= {min(cost_b, cost_c):.3g})")
+    return leaves
+
+
+def _reorder_joins(leaves: list, db: Database, q, pattern, residual: list,
+                   report: OptReport, cache: dict) -> ph.PhysicalOp:
+    """Greedy smallest-intermediate-first re-merge of the join clusters."""
+    clusters = [{"node": leaf, "cols": set(_leaf_cols(leaf)),
+                 "rows": _est_rows(leaf, db, cache)} for leaf in leaves]
+    pending = [(i, jp, (ph._key_source(q, pattern, jp.left),
+                        ph._key_source(q, pattern, jp.right)))
+               for i, jp in enumerate(q.joins)]
+    order: list[int] = []
+
+    def find(attr: str) -> Optional[int]:
+        for ci, c in enumerate(clusters):
+            if ph._static_has_col(c["cols"], attr):
+                return ci
+        return None
+
+    def apply_intra(ci: int) -> None:
+        """Fold every pending predicate now internal to cluster ``ci``."""
+        for item in list(pending):
+            i, jp, ks = item
+            li, ri = find(jp.left), find(jp.right)
+            if li == ri == ci:
+                node = ph.IntraFilter(jp, clusters[ci]["node"])
+                node.key_src = ks
+                ndv = max((float(s.ndv) for s in map(
+                    lambda src: ph.resolve_key_stats(db, src), ks)
+                    if s is not None), default=3.0)
+                clusters[ci]["node"] = node
+                clusters[ci]["rows"] /= max(
+                    min(ndv, max(clusters[ci]["rows"], 1.0)), 1.0)
+                pending.remove(item)
+                order.append(i)
+
+    for ci in range(len(clusters)):
+        apply_intra(ci)
+
+    while pending:
+        best = None
+        for item in pending:
+            i, jp, ks = item
+            li, ri = find(jp.left), find(jp.right)
+            if li is None or ri is None or li == ri:
+                continue
+            ls, rs = (ph.resolve_key_stats(db, s) for s in ks)
+            est = ph.est_join_rows(clusters[li]["rows"], clusters[ri]["rows"],
+                                   ls, rs)
+            if best is None or (est, i) < (best[0], best[1]):
+                best = (est, i, item, li, ri)
+        if best is None:
+            break   # remaining predicates span unreachable clusters
+        est, i, item, li, ri = best
+        _, jp, ks = item
+        pending.remove(item)
+        lc, rc = clusters[li], clusters[ri]
+        # build-side selection: the smaller estimated input becomes the
+        # right (sorted/build) side of the sort-merge equi-join
+        if lc["rows"] < rc["rows"]:
+            jp = type(jp)(jp.right, jp.left)
+            ks = (ks[1], ks[0])
+            lc, rc = rc, lc
+        join = ph.EquiJoin(jp, lc["node"], rc["node"])
+        join.key_src = ks
+        keep, drop = min(li, ri), max(li, ri)
+        clusters[keep] = {"node": join, "cols": lc["cols"] | rc["cols"],
+                          "rows": est}
+        del clusters[drop]
+        order.append(i)
+        apply_intra(keep)
+
+    if len(clusters) > 1:
+        # same covering rule as the builder, including its loud failure on a
+        # genuinely disconnected query — clusters are never dropped silently
+        current = ph.pick_connected_cluster(
+            [(c["node"], c["cols"]) for c in clusters],
+            list(q.select) + [pr.attr for pr in residual])
+    else:
+        current = clusters[0]["node"]
+
+    if order != sorted(order):
+        report.add("join-order", f"{order} (query order {sorted(order)})")
+    return current

@@ -60,9 +60,12 @@ class ExecContext:
     (shared sub-plans run once) plus an optional persistent inter-buffer
     consulted at cacheable nodes (cross-task structural reuse)."""
 
-    def __init__(self, db: Database, interbuffer: Optional[InterBuffer] = None):
+    def __init__(self, db: Database, interbuffer: Optional[InterBuffer] = None,
+                 ests: Optional[dict] = None):
         self.db = db
         self.interbuffer = interbuffer
+        self.ests = ests          # id(node) -> (est_rows, est_cost): feeds
+                                  # the cost-aware inter-buffer admission
         self.memo: dict = {}
         self.nodes_run = 0
         self.nodes_reused = 0     # inter-buffer hits during this execution
@@ -92,6 +95,17 @@ class PhysicalOp:
 
     def describe(self) -> str:
         return self.kind
+
+    def with_children(self, *children: "PhysicalOp") -> "PhysicalOp":
+        """Shallow clone with replaced inputs — the rewrite primitive of the
+        optimizer. Annotations (out_cols, key_src, logical) carry over; the
+        signature cache and stats are reset."""
+        import copy
+        clone = copy.copy(self)
+        clone.children = tuple(children)
+        clone.stats = NodeStats()
+        clone._sig = None
+        return clone
 
 
 def _preds_sig(preds) -> tuple:
@@ -206,6 +220,55 @@ class SemiJoinMask(PhysicalOp):
 
     def describe(self):
         return f"SemiJoinMask[{self.label}.{self.vcol} ∈ {self.ocol}]"
+
+
+class SemiJoinReduce(PhysicalOp):
+    """The opposite siding of the Eq. 9/10 semi-join: keep the rows of a
+    relational/document child whose join column appears among the graph's
+    vertex keys. Chosen by the optimizer when the vertex key set is the
+    smaller build input (the table side is what shrinks)."""
+    kind = "SemiJoinReduce"
+
+    def __init__(self, graph: str, epoch: int, label: str, vcol: str,
+                 ocol: str, table_child: PhysicalOp):
+        super().__init__(table_child)
+        self.graph = graph
+        self.epoch = epoch
+        self.label = label
+        self.vcol = vcol
+        self.ocol = ocol
+
+    def params(self):
+        return (self.graph, self.epoch, self.label, self.vcol, self.ocol)
+
+    def run(self, ctx, t: Table):
+        g = ctx.db.graphs[self.graph]
+        mask = join_mod.semi_join_table(t, self.ocol, g, self.label, self.vcol)
+        return t.take(np.nonzero(mask)[0])
+
+    def describe(self):
+        return f"SemiJoinReduce[{self.ocol} ∈ {self.label}.{self.vcol}]"
+
+
+class PruneCols(PhysicalOp):
+    """Projection sink-down into the scan: drop base-table columns never
+    referenced above (join keys, projection, residual predicates), so joins
+    and record gathers move fewer bytes."""
+    kind = "PruneCols"
+
+    def __init__(self, child: PhysicalOp, cols: tuple):
+        super().__init__(child)
+        self.cols = tuple(cols)
+
+    def params(self):
+        return (self.cols,)
+
+    def run(self, ctx, t: Table):
+        return Table(t.name, {c: t.columns[c] for c in self.cols
+                              if c in t.columns})
+
+    def describe(self):
+        return f"PruneCols[{', '.join(self.cols)}]"
 
 
 class MatchPattern(PhysicalOp):
@@ -610,13 +673,77 @@ def _static_has_col(cols: set, attr: str) -> bool:
     return attr in cols or ("." in attr and attr.split(".", 1)[1] in cols)
 
 
-def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
-    """Emit the physical DAG for a logical GCDIPlan. The dynamic cluster
-    merging of the old executor is simulated statically: each collection's
-    output column set is known at plan time, so every join lands on a
-    concrete EquiJoin/IntraFilter node."""
-    from .planner import _graph_join_side
+def _key_source(q: Query, pattern: Optional[Pattern], attr: str):
+    """Resolve a join attribute to its backing base collection, for NDV
+    lookup: ("table", name, col) | ("vertex", graph, label, col) |
+    ("edge", graph, col) | None."""
+    coll, _, col = attr.partition(".")
+    if not col:
+        return None
+    if coll in q.froms:
+        return ("table", coll, col)
+    if pattern is not None:
+        for v in pattern.vertices:
+            if v.var == coll:
+                return ("vertex", pattern.graph, v.label, col)
+        for e in pattern.edges:
+            if e.var == coll:
+                return ("edge", pattern.graph, col)
+    return None
 
+
+def resolve_key_stats(db: Database, src):
+    """ColumnStats of a ``_key_source`` result against the live catalog
+    (merged base ⊕ delta views), or None."""
+    try:
+        if src is None:
+            return None
+        if src[0] == "table":
+            return db.tables[src[1]].stats(src[2])
+        if src[0] == "vertex":
+            return db.graphs[src[1]].vertex_tables[src[2]].stats(src[3])
+        if src[0] == "edge":
+            return db.graphs[src[1]].edges.stats(src[2])
+    except KeyError:
+        return None
+    return None
+
+
+def pick_connected_cluster(clusters: list, needed: list):
+    """Select the cluster (node, column-set pairs) covering every needed
+    attribute when joins left more than one behind. Raises on a genuinely
+    disconnected query — never silently drops result columns."""
+    scored = sorted(
+        ((sum(1 for a in needed if _static_has_col(cols, a)), i)
+         for i, (_, cols) in enumerate(clusters)),
+        key=lambda t: (-t[0], t[1]))
+    if scored[0][0] < len(needed):
+        raise ValueError("query is disconnected: projection attributes "
+                         "span un-joined collections")
+    return clusters[scored[0][1]][0]
+
+
+def est_join_rows(nl: float, nr: float, ls, rs) -> float:
+    """|L ⋈ R| under the uniform-key model: nl·nr / max(ndv) with NDVs
+    capped by the (possibly filtered) input cardinalities. Falls back to
+    max(nl, nr) when neither key resolves to base statistics."""
+    ndvs = []
+    if ls is not None and ls.ndv:
+        ndvs.append(min(float(ls.ndv), max(nl, 1.0)))
+    if rs is not None and rs.ndv:
+        ndvs.append(min(float(rs.ndv), max(nr, 1.0)))
+    if not ndvs:
+        return float(max(nl, nr))
+    return nl * nr / max(max(ndvs), 1.0)
+
+
+def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
+    """Emit the *naive* physical DAG for a logical GCDIPlan: clusters join
+    in query order and graph↔table joins stay post-match equi-joins. The
+    dynamic cluster merging of the old executor is simulated statically
+    (each collection's output column set is known at plan time); cluster
+    roots carry ``out_cols`` and joins carry resolved key sources, which is
+    what :func:`repro.core.optimizer.optimize` rewrites against."""
     q: Query = p.query
     pattern = q.match
 
@@ -648,23 +775,9 @@ def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
             graph_node = EdgeScan(gname, gep, pattern, p.pattern_plan)
             vars_in_rel = {pattern.edges[0].var}
         else:
-            mask_vars: list[str] = []
-            mask_nodes: list[PhysicalOp] = []
-            vset = {v.var for v in pattern.vertices}
-            for i in sorted(p.semi_join_idx):
-                jp = q.joins[i]
-                side = _graph_join_side(q, vset, jp)
-                if side is None:
-                    continue
-                tbl_attr, var_attr = side
-                tcoll, tcol = tbl_attr.split(".", 1)
-                vvar, vcol = var_attr.split(".", 1)
-                label = pattern.vertex(vvar).label
-                mask_vars.append(vvar)
-                mask_nodes.append(SemiJoinMask(gname, gep, label, vcol, tcol,
-                                              table_nodes[tcoll]))
-            graph_node = MatchPattern(gname, gep, p.pattern_plan,
-                                      tuple(mask_vars), *mask_nodes)
+            # naive: no semi-join pushdown — Eq. 8 shape. The optimizer
+            # makes the cost-based Eq. 9/10 siding decision per candidate.
+            graph_node = MatchPattern(gname, gep, p.pattern_plan, ())
             vars_in_rel = all_vars
 
         # graph projection π̂_A' — static column prediction mirrors run()
@@ -684,15 +797,17 @@ def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
                 graph_cols.add(f"{var}.{attr}")
         if not graph_cols:
             graph_cols = set(vars_in_rel)
+        graph_node.out_cols = frozenset(graph_cols)
 
-    # step 3: multi-way joins — static cluster merging
+    # step 3: multi-way joins — static cluster merging in query order
     clusters: list[tuple[PhysicalOp, set[str]]] = []
     if graph_node is not None:
         clusters.append((graph_node, graph_cols))
     for name in q.froms:
         t = db.tables[name]
-        clusters.append((Alias(table_nodes[name], name),
-                         {f"{name}.{k}" for k in t.columns}))
+        alias = Alias(table_nodes[name], name)
+        alias.out_cols = frozenset(f"{name}.{k}" for k in t.columns)
+        clusters.append((alias, set(alias.out_cols)))
 
     def _find(attr: str) -> int:
         for ci, (_, cols) in enumerate(clusters):
@@ -704,24 +819,23 @@ def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
         li_c, ri_c = _find(jp.left), _find(jp.right)
         if li_c == ri_c:
             node, cols = clusters[li_c]
-            clusters[li_c] = (IntraFilter(jp, node), cols)
+            intra = IntraFilter(jp, node)
+            intra.key_src = (_key_source(q, pattern, jp.left),
+                             _key_source(q, pattern, jp.right))
+            clusters[li_c] = (intra, cols)
             continue
         ln, lc = clusters[li_c]
         rn, rc = clusters[ri_c]
-        clusters[min(li_c, ri_c)] = (EquiJoin(jp, ln, rn), lc | rc)
+        join = EquiJoin(jp, ln, rn)
+        join.key_src = (_key_source(q, pattern, jp.left),
+                        _key_source(q, pattern, jp.right))
+        clusters[min(li_c, ri_c)] = (join, lc | rc)
         del clusters[max(li_c, ri_c)]
 
     if len(clusters) > 1:
         # disconnected query: keep the cluster holding the projection attrs
-        needed = list(q.select) + [pr.attr for pr in p.residual]
-        scored = sorted(
-            ((sum(1 for a in needed if _static_has_col(cols, a)), i)
-             for i, (_, cols) in enumerate(clusters)),
-            key=lambda t: (-t[0], t[1]))
-        if scored[0][0] < len(needed):
-            raise ValueError("query is disconnected: projection attributes "
-                             "span un-joined collections")
-        current = clusters[scored[0][1]][0]
+        current = pick_connected_cluster(
+            clusters, list(q.select) + [pr.attr for pr in p.residual])
     else:
         current = clusters[0][0]
 
@@ -731,7 +845,9 @@ def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
 
     # step 5: final projection — root signature carries every source epoch
     epochs = tuple((n, db.epoch_of(n)) for n in q.source_names())
-    return Project(q.select, epochs, current)
+    root = Project(q.select, epochs, current)
+    root.logical = p    # the optimizer rewrites against the logical plan
+    return root
 
 
 def build_gcdia(db: Database, p, task, mode: str = "gredo", *,
@@ -789,17 +905,35 @@ def execute(node: PhysicalOp, ctx: ExecContext):
     node.stats.nbytes = value_nbytes(out)
     ctx.nodes_run += 1
     if ctx.interbuffer is not None and node.cacheable:
-        out = ctx.interbuffer.put(fingerprint(sig), out)
+        est = ctx.ests.get(id(node)) if ctx.ests is not None else None
+        out = ctx.interbuffer.put(fingerprint(sig), out,
+                                  est_cost=None if est is None else est[1])
     ctx.memo[sig] = out
     return out
 
 
-def estimate(root: PhysicalOp, db: Database) -> dict:
+def estimate(root: PhysicalOp, db: Database,
+             _cache: Optional[dict] = None) -> dict:
     """Static (est_rows, est_cost) per node, bottom-up, using the §6.3 cost
-    model — the hook future cost-based DAG rewrites key off. Returns
-    ``{id(node): (est_rows, est_cost)}``."""
+    model over the live column statistics (NDV, histograms, MCV counts) —
+    the numbers the optimizer's DAG rewrites and the cost-aware inter-buffer
+    admission key off. ``est_cost`` is *cumulative*: the operator's own cost
+    plus that of every *distinct* node in its subtree (shared sub-plans are
+    counted once, matching the executor's signature memoization) — i.e. the
+    estimated price of recomputing the node from base collections.
+    Returns ``{id(node): (est_rows, est_cost)}``.
+
+    ``_cache`` (optional) memoizes per-node results across repeated calls
+    while the catalog is unchanged — the optimizer threads one through its
+    passes so candidate evaluation doesn't re-derive shared subtrees.
+    Entries keep a reference to their node, so ids stay unique for the
+    cache's lifetime."""
     from . import cost as cost_mod
-    out: dict[int, tuple[float, float]] = {}
+    rows_of: dict[int, float] = {}     # est rows per node
+    own: dict[int, float] = {}         # the operator's own (non-subtree) cost
+    cum: dict[int, float] = {}         # dedup-summed subtree cost per node
+    nodes: dict[int, PhysicalOp] = {}
+    width: dict[int, float] = {}       # est columns of matrix-valued nodes
 
     def sel(tbl: Table, preds) -> float:
         s = 1.0
@@ -807,9 +941,31 @@ def estimate(root: PhysicalOp, db: Database) -> dict:
             s *= tbl.stats(p.column).selectivity(p)
         return s
 
+    def pred_sel(pred) -> float:
+        if pred.collection in db.tables:
+            return db.tables[pred.collection].stats(pred.column).selectivity(pred)
+        return 1.0 / 3.0
+
+    def mask_rows(n: SemiJoinMask, child_rows: float) -> float:
+        """Expected candidate vertices a semi-join mask keeps."""
+        n_label = float(db.graphs[n.graph].vertex_tables[n.label].nrows)
+        os = resolve_key_stats(db, getattr(n, "ocol_src", None))
+        keys = min(float(os.ndv), child_rows) if os is not None else child_rows
+        return min(n_label, max(keys, 0.0))
+
     def walk(n: PhysicalOp) -> float:
-        if id(n) in out:
-            return out[id(n)][0]
+        if id(n) in rows_of:
+            return rows_of[id(n)]
+        nodes[id(n)] = n
+        if _cache is not None:
+            ent = _cache.get(id(n))
+            if ent is not None and ent[0] is n:
+                rows_of[id(n)], own[id(n)], width[id(n)] = ent[1]
+                if ent[2] is not None:
+                    cum[id(n)] = ent[2]
+                for c in n.children:    # register descendants for dedup sums
+                    walk(c)
+                return rows_of[id(n)]
         child_rows = [walk(c) for c in n.children]
         first = child_rows[0] if child_rows else 0.0
         if isinstance(n, ScanTable):
@@ -819,9 +975,23 @@ def estimate(root: PhysicalOp, db: Database) -> dict:
             s = sel(db.tables[n.preds[0].collection], n.preds) if n.preds else 1.0
             rows = first * s
             cost = first * len(n.preds) * cost_mod.COST_CPU
+        elif isinstance(n, PruneCols):
+            rows = first
+            cost = len(n.cols) * cost_mod.COST_CPU
         elif isinstance(n, SemiJoinMask):
-            rows = float(db.graphs[n.graph].vertex_tables[n.label].nrows)
-            cost = cost_mod.cost_join(first, rows)
+            n_label = float(db.graphs[n.graph].vertex_tables[n.label].nrows)
+            rows = mask_rows(n, first)
+            cost = cost_mod.cost_semijoin(first, n_label)
+        elif isinstance(n, SemiJoinReduce):
+            g = db.graphs[n.graph]
+            n_label = float(g.vertex_tables[n.label].nrows)
+            vs = g.vertex_tables[n.label].stats(n.vcol) \
+                if n.vcol in g.vertex_tables[n.label].columns else None
+            os = resolve_key_stats(db, getattr(n, "ocol_src", None))
+            keys = min(float(vs.ndv), n_label) if vs is not None else n_label
+            dom = float(os.ndv) if os is not None else max(first, 1.0)
+            rows = first * min(1.0, keys / max(dom, 1.0))
+            cost = cost_mod.cost_semijoin(first, n_label)
         elif isinstance(n, MatchPattern):
             g = db.graphs[n.graph]
             p = n.pplan
@@ -829,21 +999,43 @@ def estimate(root: PhysicalOp, db: Database) -> dict:
             start = chain[-1] if p.reverse else chain[0]
             stbl = g.vertex_tables[p.pattern.vertex(start).label]
             n_start = stbl.nrows * sel(stbl, p.pushed.get(start, []))
+            # semi-join candidate masks shrink the start frontier (or filter
+            # the result, when the masked var is not the traversal start)
+            filter_frac = 1.0
+            for var, mchild, crows in zip(n.mask_vars, n.children, child_rows):
+                mnode = mchild if isinstance(mchild, SemiJoinMask) else None
+                label = p.pattern.vertex(var).label
+                n_label = float(g.vertex_tables[label].nrows)
+                kept = crows if mnode is not None else n_label
+                frac = min(1.0, kept / max(n_label, 1.0))
+                if var == start:
+                    n_start *= frac
+                else:
+                    filter_frac *= frac
             hops = len(p.pattern.edges)
-            rows = n_start * (g.avg_out_degree ** hops)
+            fanout = g.hop_expansion(reverse=p.reverse)
+            # end/interior pushed predicates filter the expansion too
+            end_sel = 1.0
+            for var, ps in p.pushed.items():
+                if var == start:
+                    continue
+                vtbl = (g.edges if any(e.var == var for e in p.pattern.edges)
+                        else g.vertex_tables[p.pattern.vertex(var).label])
+                end_sel *= sel(vtbl, ps)
+            rows = n_start * (fanout ** hops) * filter_frac * end_sel
             cost = cost_mod.cost_pattern(
                 sum(len(ps) for v, ps in p.pushed.items()
                     if not any(e.var == v for e in p.pattern.edges)),
                 sum(len(ps) for v, ps in p.pushed.items()
                     if any(e.var == v for e in p.pattern.edges)),
                 g.n_vertices, g.n_live_edges, n_start, hops,
-                g.avg_out_degree, rows,
+                fanout, rows,
                 sum(len(ps) for ps in p.deferred.values()))
         elif isinstance(n, TableJoinMatch):
             g = db.graphs[n.graph]
             hops = len(n.pattern.edges)
-            e, v = g.n_live_edges, max(g.n_vertices, 1)
-            rows = (float(e) * (e / v) ** (hops - 1) if hops
+            e = g.n_live_edges
+            rows = (float(e) * g.hop_expansion() ** (hops - 1) if hops
                     else float(g.vertex_tables[n.pattern.vertices[0].label].nrows))
             cost = sum(cost_mod.cost_join(rows, e) for _ in range(max(hops, 1)))
         elif isinstance(n, VertexScan):
@@ -861,20 +1053,90 @@ def estimate(root: PhysicalOp, db: Database) -> dict:
             rows = first
             cost = cost_mod.cost_project(first, sum(map(len, n.wanted.values())))
         elif isinstance(n, EquiJoin):
-            rows = max(child_rows)
+            ls, rs = (resolve_key_stats(db, s)
+                      for s in getattr(n, "key_src", (None, None)))
+            rows = est_join_rows(child_rows[0], child_rows[1], ls, rs)
             cost = cost_mod.cost_join(child_rows[0], child_rows[1])
-        elif isinstance(n, (IntraFilter, Residual)):
-            k = len(getattr(n, "preds", (0,)))
-            rows = first / 3.0
-            cost = first * k * cost_mod.COST_CPU
-        else:   # Alias / Project / matrix generation / analytics
-            rows = first
+        elif isinstance(n, IntraFilter):
+            ls, rs = (resolve_key_stats(db, s)
+                      for s in getattr(n, "key_src", (None, None)))
+            ndv = max((float(s.ndv) for s in (ls, rs) if s is not None),
+                      default=3.0)
+            rows = first / max(min(ndv, max(first, 1.0)), 1.0)
             cost = first * cost_mod.COST_CPU
-        out[id(n)] = (rows, cost)
+        elif isinstance(n, Residual):
+            s = 1.0
+            for pred in n.preds:
+                s *= pred_sel(pred)
+            rows = first * s
+            cost = first * len(n.preds) * cost_mod.COST_CPU
+        elif isinstance(n, Rel2Matrix):
+            rows = first
+            width[id(n)] = float(len(n.columns))
+            cost = cost_mod.cost_matrix_gen(first, len(n.columns))
+        elif isinstance(n, RandomAccessMatrix):
+            rows = first
+            width[id(n)] = float(n.n_features)
+            cost = cost_mod.cost_matrix_gen(first, n.n_features)
+        elif isinstance(n, Const):
+            shape = n._digest[1]
+            rows = float(shape[0]) if shape else 1.0
+            width[id(n)] = float(shape[1]) if len(shape) > 1 else 1.0
+            cost = 0.0
+        elif isinstance(n, MatMul):
+            k = width.get(id(n.children[0]), 1.0)
+            m = first if n.gram else width.get(id(n.children[1]), 1.0)
+            rows = first
+            width[id(n)] = m
+            cost = cost_mod.cost_matmul(first, k, m)
+        elif isinstance(n, Similarity):
+            k = width.get(id(n.children[0]), 1.0)
+            m = first if n.self_sim else child_rows[1]
+            rows = first
+            width[id(n)] = m
+            cost = cost_mod.cost_similarity(first, k, m)
+        elif isinstance(n, Regression):
+            k = width.get(id(n.children[0]), 1.0)
+            rows = k
+            width[id(n)] = 1.0
+            cost = cost_mod.cost_regression(first, k, n.iters)
+        else:   # Alias / Project / remaining pass-throughs
+            rows = first
+            width[id(n)] = width.get(id(n.children[0]), 1.0) if n.children else 1.0
+            cost = first * cost_mod.COST_CPU
+        rows_of[id(n)] = rows
+        own[id(n)] = cost
+        if _cache is not None:
+            _cache[id(n)] = [n, (rows, cost, width.get(id(n), 1.0)), None]
         return rows
 
     walk(root)
-    return out
+
+    def cumulative(n: PhysicalOp) -> float:
+        """Sum of own costs over the *distinct* nodes of n's subtree —
+        shared sub-plans count once, like the executor runs them. Memoized
+        per node (and persisted in ``_cache``: a node's subtree cost is
+        context-independent)."""
+        if id(n) in cum:
+            return cum[id(n)]
+        seen: set[int] = set()
+        total = 0.0
+        stack = [n]
+        while stack:
+            m = stack.pop()
+            if id(m) in seen:
+                continue
+            seen.add(id(m))
+            total += own[id(m)]
+            stack.extend(m.children)
+        cum[id(n)] = total
+        if _cache is not None:
+            ent = _cache.get(id(n))
+            if ent is not None and ent[0] is n:
+                ent[2] = total
+        return total
+
+    return {nid: (rows_of[nid], cumulative(m)) for nid, m in nodes.items()}
 
 
 def collect_stats(root: PhysicalOp) -> list[dict]:
@@ -898,14 +1160,18 @@ def collect_stats(root: PhysicalOp) -> list[dict]:
 
 
 def explain(root: PhysicalOp, stats: bool = False,
-            db: Optional[Database] = None) -> str:
+            db: Optional[Database] = None,
+            ests: Optional[dict] = None) -> str:
     """GCDIPlan.explain()-style rendering of the operator DAG. With
     ``stats=True`` (after execution) each row shows rows/bytes/seconds and
     whether the operator was satisfied from the inter-buffer; with ``db``
-    each row shows the §6.3 cost-model estimates instead."""
+    (or a precomputed ``ests`` map) each row also shows the §6.3 cost-model
+    estimates — so a post-execution rendering puts est_rows next to the
+    actual rows per operator."""
     lines: list[str] = []
     seen: dict[int, int] = {}
-    ests = estimate(root, db) if db is not None else {}
+    if ests is None:
+        ests = estimate(root, db) if db is not None else {}
 
     def walk(n: PhysicalOp, depth: int):
         pad = "  " * depth

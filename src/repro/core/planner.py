@@ -19,10 +19,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from . import cost as cost_mod
 from . import pattern as pattern_mod
-from .schema import JoinPred, Pattern, Predicate, Query
-from .storage import Database, Graph, Table
+from .schema import JoinPred, Predicate, Query
+from .storage import Database, Table
 
 
 @dataclasses.dataclass
@@ -31,7 +30,8 @@ class GCDIPlan:
     pattern_plan: Optional[pattern_mod.PatternPlan]
     table_pushdown: dict                  # collection -> [Predicate]
     residual: list                        # predicates evaluated post-join
-    semi_join_idx: set                    # indices into query.joins executed as graph semi-joins
+    semi_join_idx: set                    # candidate graph↔table join indices (Eq. 9/10
+                                          # siding is decided by repro.core.optimizer)
     graph_projection: set                 # pattern vars kept after projection trimming
     match_trim: Optional[str]             # None | "vertex_scan" | "edge_scan"
     notes: list = dataclasses.field(default_factory=list)
@@ -45,7 +45,8 @@ class GCDIPlan:
         if self.match_trim:
             lines.append(f"  match-trimming: {self.match_trim}")
         if self.semi_join_idx:
-            lines.append(f"  join-pushdown (Eq.9/10) on joins {sorted(self.semi_join_idx)}")
+            lines.append(f"  join-pushdown candidates (Eq.9/10): joins "
+                         f"{sorted(self.semi_join_idx)} (siding: optimizer)")
         lines.append(f"  graph-projection A' = {sorted(self.graph_projection)}")
         if self.residual:
             lines.append(f"  residual σ: {self.residual}")
@@ -125,43 +126,18 @@ def plan(db: Database, q: Query, enable_opt: bool = True,
         else:
             graph_projection = set(pattern_vars)
 
-    # --- mechanism 2: cost-based join pushdown (Eq. 8 -> 9/10) ---
+    # --- mechanism 2: join pushdown candidates (Eq. 8 -> 9/10) ---
+    # The *logical* decision stops at eligibility: which joins connect a
+    # table/document collection to a pattern vertex. The cost-based siding
+    # (graph-side mask vs. table-side reduce vs. post-match join) is a
+    # physical rewrite, made by repro.core.optimizer against live statistics.
     semi_join_idx: set[int] = set()
     if enable_opt and pattern and not match_trim:
-        g: Graph = db.graphs[pattern.graph]
         for i, jp in enumerate(q.joins):
-            side = _graph_join_side(q, pattern_vars, jp)
-            if side is None:
-                continue
-            tbl_attr, var_attr = side
-            tcoll = tbl_attr.split(".", 1)[0]
-            tbl = db.tables[tcoll]
-            n_t = tbl.nrows
-            for p in table_pushdown.get(tcoll, []):
-                n_t = int(n_t * tbl.stats(p.column).selectivity(p))
-            vvar = var_attr.split(".", 1)[0]
-            vlabel = pattern.vertex(vvar).label
-            n_v = g.vertex_tables[vlabel].nrows
-            hops = len(pattern.edges)
-            est_match = n_v * (g.avg_out_degree ** hops)
-            # Plan A (Eq. 8): match on full candidates, then join
-            # (n_live_edges: base edges may drift from reality between
-            # delta-store compactions)
-            cost_a = cost_mod.cost_pattern(0, 0, n_v, g.n_live_edges, n_v, hops,
-                                           g.avg_out_degree, est_match, 0)
-            cost_a += cost_mod.cost_join(est_match, n_t)
-            # Plan B (Eq. 9/10): semi-join shrinks candidates, then match
-            shrink = min(1.0, n_t / max(n_v, 1))
-            est_match_b = n_v * shrink * (g.avg_out_degree ** hops)
-            cost_b = cost_mod.cost_join(n_v, n_t)
-            cost_b += cost_mod.cost_pattern(0, 0, int(n_v * shrink), g.n_live_edges,
-                                            n_v * shrink, hops, g.avg_out_degree,
-                                            est_match_b, 0)
-            if cost_b < cost_a:
+            if _graph_join_side(q, pattern_vars, jp) is not None:
                 semi_join_idx.add(i)
-                notes.append(f"join-pushdown join#{i} ({jp}): cost {cost_b:.3g} < {cost_a:.3g}")
-            else:
-                notes.append(f"join kept post-match join#{i} ({jp}): {cost_a:.3g} <= {cost_b:.3g}")
+                notes.append(f"join-pushdown candidate join#{i} ({jp}): "
+                             "siding decided by the optimizer")
 
     # --- pattern plan (mechanism 1 + 4 inside) ---
     pattern_plan = None

@@ -144,47 +144,211 @@ def _col_take(c: Column, idx) -> Column:
 # Column statistics for the cost model (§6.3: selectivity estimation)
 # ---------------------------------------------------------------------------
 
+N_HIST_BUCKETS = 32     # equi-width histogram resolution for numeric columns
+MCV_CAP = 4096          # keep exact per-value counts up to this many distincts
+
 
 @dataclasses.dataclass
 class ColumnStats:
+    """Per-column statistics: row count, NDV, min/max, an equi-width
+    histogram for numeric columns, and exact per-value counts for
+    dictionary-encoded columns (most-common-value statistics). The optimizer
+    keys join ordering and semi-join siding off ``ndv``; ``selectivity`` is
+    value-aware when the per-value counts are present."""
+
     n: int
-    ndv: int               # number of distinct values
+    ndv: int                              # number of distinct values
     vmin: Any = None
     vmax: Any = None
+    hist: Optional[np.ndarray] = None     # bucket counts (equi-width)
+    edges: Optional[np.ndarray] = None    # len(hist)+1 bucket boundaries
+    value_counts: Optional[dict] = None   # value -> exact row count
 
-    def selectivity(self, pred) -> float:
-        """Standard System-R style estimates under attribute independence."""
+    def eq_fraction(self, value) -> float:
+        """Fraction of rows equal to ``value`` (exact when MCV counts are
+        kept, System-R 1/ndv otherwise)."""
         if self.n == 0:
             return 0.0
-        if pred.op == "==":
-            return 1.0 / max(self.ndv, 1)
-        if pred.op == "!=":
-            return 1.0 - 1.0 / max(self.ndv, 1)
-        if pred.op == "in":
-            return min(1.0, len(pred.value) / max(self.ndv, 1))
+        if self.value_counts is not None:
+            return self.value_counts.get(value, 0) / self.n
+        return 1.0 / max(self.ndv, 1)
+
+    def _cdf(self, x: float) -> float:
+        """P(col <= x) from the histogram (linear within a bucket)."""
+        e, h = self.edges, self.hist
+        total = h.sum()
+        if total == 0:
+            return 0.0
+        if x <= e[0]:
+            return 0.0
+        if x >= e[-1]:
+            return 1.0
+        i = int(np.searchsorted(e, x, side="right")) - 1
+        i = min(i, len(h) - 1)
+        width = e[i + 1] - e[i]
+        frac_in = (x - e[i]) / width if width > 0 else 1.0
+        return float(h[:i].sum() + h[i] * frac_in) / float(total)
+
+    def range_fraction(self, lo, hi) -> float:
+        """Fraction of rows in [lo, hi], histogram-backed when available."""
+        if self.hist is not None and self.edges is not None and len(self.edges) > 1:
+            return max(0.0, self._cdf(float(hi)) - self._cdf(float(lo)))
         if self.vmin is None or self.vmax is None or self.vmax == self.vmin:
             return 1.0 / 3.0
         span = float(self.vmax) - float(self.vmin)
-        if pred.op == "range":
-            return min(1.0, max(0.0, (float(pred.value2) - float(pred.value)) / span))
-        if pred.op in ("<", "<="):
-            return min(1.0, max(0.0, (float(pred.value) - float(self.vmin)) / span))
-        return min(1.0, max(0.0, (float(self.vmax) - float(pred.value)) / span))
+        return min(1.0, max(0.0, (float(hi) - float(lo)) / span))
+
+    def selectivity(self, pred) -> float:
+        """System-R style estimates, upgraded with MCV counts (equality on
+        dictionary columns is exact) and equi-width histograms (range).
+        Always clamped to [0, 1]."""
+        return min(1.0, max(0.0, self._selectivity(pred)))
+
+    def _selectivity(self, pred) -> float:
+        if self.n == 0:
+            return 0.0
+        if pred.op == "==":
+            return self.eq_fraction(pred.value)
+        if pred.op == "!=":
+            return 1.0 - self.eq_fraction(pred.value)
+        if pred.op == "in":
+            if self.value_counts is not None:
+                return sum(self.value_counts.get(v, 0)
+                           for v in pred.value) / self.n
+            return len(pred.value) / max(self.ndv, 1)
+        try:
+            if pred.op == "range":
+                return self.range_fraction(pred.value, pred.value2)
+            if pred.op in ("<", "<="):
+                lo = self.vmin if self.vmin is not None else pred.value
+                return self.range_fraction(lo, pred.value)
+            hi = self.vmax if self.vmax is not None else pred.value
+            return self.range_fraction(pred.value, hi)
+        except (TypeError, ValueError):
+            return 1.0 / 3.0
+
+    # ---- incremental maintenance (delta-store appends) ----
+    def extend_numeric(self, run: np.ndarray) -> None:
+        """Absorb appended numeric values in O(|run| + buckets): min/max and
+        histogram update exactly (re-binning old counts proportionally when
+        the value range grows); NDV extrapolates with the observed
+        distinctness ratio, so key-like columns keep growing while
+        low-cardinality columns stay put."""
+        run = np.asarray(run, dtype=np.float64)
+        n_add = len(run)                 # n counts rows, like compute_stats
+        if n_add == 0:
+            return
+        run = run[np.isfinite(run)]      # values feed min/max/hist/MCV only
+        if run.size == 0:
+            self.n += n_add
+            return
+        if self.n == 0 or self.ndv == 0:
+            # empty/all-NaN base: seed from the run (a 0 distinctness ratio
+            # would otherwise freeze ndv at 0 forever)
+            n_rows = self.n + n_add
+            fresh = _numeric_stats(run, n_rows)
+            self.n, self.ndv = n_rows, fresh.ndv
+            self.vmin, self.vmax = fresh.vmin, fresh.vmax
+            self.hist, self.edges = fresh.hist, fresh.edges
+            self.value_counts = fresh.value_counts
+            return
+        self.n += n_add
+        if self.value_counts is not None:
+            # exact per-value counts (and therefore exact NDV) survive the
+            # append; drop to estimates only past the MCV cap
+            u, c = np.unique(run, return_counts=True)
+            for v, k in zip(u.tolist(), c.tolist()):
+                self.value_counts[v] = self.value_counts.get(v, 0) + k
+            if len(self.value_counts) > MCV_CAP:
+                self.value_counts = None
+            else:
+                self.ndv = len(self.value_counts)
+        if self.value_counts is None:
+            n_old = self.n - n_add
+            ratio = min(1.0, self.ndv / max(n_old, 1))
+            self.ndv = min(self.n,
+                           self.ndv + max(int(round(len(run) * ratio)), 0))
+        rmin, rmax = float(run.min()), float(run.max())
+        vmin = rmin if self.vmin is None else min(float(self.vmin), rmin)
+        vmax = rmax if self.vmax is None else max(float(self.vmax), rmax)
+        if self.hist is None or self.edges is None:
+            self.vmin, self.vmax = vmin, vmax
+            return
+        if vmin < self.edges[0] or vmax > self.edges[-1]:
+            new_edges = np.linspace(vmin, vmax if vmax > vmin else vmin + 1.0,
+                                    len(self.hist) + 1)
+            self.hist = _rebin(self.hist, self.edges, new_edges)
+            self.edges = new_edges
+        self.hist = self.hist + np.histogram(run, bins=self.edges)[0]
+        self.vmin, self.vmax = vmin, vmax
+
+
+def _rebin(counts: np.ndarray, old_edges: np.ndarray,
+           new_edges: np.ndarray) -> np.ndarray:
+    """Redistribute equi-width histogram counts onto new bucket boundaries,
+    assigning each old bucket's mass proportionally to its overlap."""
+    out = np.zeros(len(new_edges) - 1, dtype=np.float64)
+    for i in range(len(counts)):
+        lo, hi = old_edges[i], old_edges[i + 1]
+        width = hi - lo
+        if counts[i] == 0:
+            continue
+        if width <= 0:
+            j = min(int(np.searchsorted(new_edges, lo, "right")) - 1, len(out) - 1)
+            out[max(j, 0)] += counts[i]
+            continue
+        for j in range(len(out)):
+            ov = min(hi, new_edges[j + 1]) - max(lo, new_edges[j])
+            if ov > 0:
+                out[j] += counts[i] * (ov / width)
+    return out
+
+
+def _numeric_stats(vals: np.ndarray, n_rows: int) -> ColumnStats:
+    finite = vals[np.isfinite(vals)] if vals.dtype.kind == "f" else vals
+    if finite.size == 0:
+        return ColumnStats(n_rows, 0)
+    u, c = np.unique(finite, return_counts=True)
+    vmin, vmax = float(u[0]), float(u[-1])
+    hist, edges = np.histogram(
+        finite, bins=N_HIST_BUCKETS,
+        range=(vmin, vmax if vmax > vmin else vmin + 1.0))
+    vc = None
+    if len(u) <= MCV_CAP:
+        vc = {u[i].item(): int(c[i]) for i in range(len(u))}
+    return ColumnStats(n_rows, int(len(u)), vmin, vmax,
+                       hist.astype(np.float64), edges, vc)
+
+
+def dict_stats(n: int, vocab: np.ndarray, counts: np.ndarray) -> ColumnStats:
+    """ColumnStats of a dictionary-encoded column from its (vocab, per-code
+    counts) — the single MCV construction shared by cold ``compute_stats``
+    and the delta store's incrementally-maintained merged-view stats."""
+    vc = None
+    if len(vocab) <= MCV_CAP:
+        vc = {vocab[i]: int(counts[i]) for i in range(len(vocab))}
+    return ColumnStats(n=n, ndv=int((counts > 0).sum()), value_counts=vc)
 
 
 def compute_stats(col: Column) -> ColumnStats:
     if isinstance(col, DictColumn):
-        return ColumnStats(n=len(col), ndv=len(col.vocab))
+        counts = np.bincount(col.codes, minlength=len(col.vocab))
+        return dict_stats(len(col), col.vocab, counts)
     if isinstance(col, RaggedColumn):
-        vals = col.values
+        vals = np.asarray(col.values)
+        if vals.size and vals.dtype.kind in "ifu":
+            # value-level stats: n counts flat values, so predicate fractions
+            # stay in [0, 1] (a lower-bound proxy for ANY-row selectivity)
+            return _numeric_stats(vals, len(vals))
         ndv = len(np.unique(vals)) if len(vals) else 0
         return ColumnStats(n=len(col), ndv=ndv)
     col = np.asarray(col)
     if col.size == 0:
         return ColumnStats(0, 0)
-    if col.dtype.kind in "if":
-        return ColumnStats(len(col), int(len(np.unique(col))), col.min(), col.max())
-    return ColumnStats(len(col), int(len(np.unique(col))))
+    if col.dtype.kind in "ifu":
+        return _numeric_stats(col, len(col))
+    uniq = np.unique(col)
+    return ColumnStats(len(col), int(len(uniq)))
 
 
 # ---------------------------------------------------------------------------
@@ -560,6 +724,16 @@ class Graph:
     @property
     def avg_out_degree(self) -> float:
         return self.n_live_edges / max(self.n_vertices, 1)
+
+    def hop_expansion(self, reverse: bool = False) -> float:
+        """Label-aware per-hop fan-out: live edges per vertex of the label a
+        traversal expands *from* (src label forward, dst label reverse).
+        On bipartite graphs this differs from ``avg_out_degree`` by the label
+        size ratio, which is exactly the error the global average makes on
+        reverse traversals. Consistent with pending delta segments: both the
+        live-edge count and the merged vertex tables include the delta."""
+        label = self.dst_label if reverse else self.src_label
+        return self.n_live_edges / max(self.vertex_tables[label].nrows, 1)
 
     # ---- base ⊕ delta topology reads ----
     def expand(self, frontier: np.ndarray, reverse: bool = False

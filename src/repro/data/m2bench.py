@@ -168,6 +168,24 @@ def q_g4() -> Query:
     )
 
 
+def q_opt_skew() -> Query:
+    """Skewed 3-join optimizer exemplar: the query order merges the two
+    largest collections (graph relation, Orders) first and leaves the
+    selective Product.title filter for last — smallest-intermediate-first
+    reordering must flip it (Product ⋈ Orders ⋈ Customer ⋈ pattern)."""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(
+        select=("Customer.id", "t.tid"),
+        froms=("Orders", "Customer", "Product"),
+        match=pat,
+        joins=(JoinPred("Customer.person_id", "p.pid"),
+               JoinPred("Orders.customer_id", "Customer.id"),
+               JoinPred("Product.id", "Orders.product_id")),
+        where=(Predicate("Product.title", "==", "Yogurt"),
+               Predicate("t.content", "==", "food")),
+    )
+
+
 def q_g5() -> Query:
     """G5: range predicate on edge property (match-trimming candidate:
     v-e-v with edge-only predicates, but projection references vertices)."""

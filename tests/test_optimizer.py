@@ -1,0 +1,411 @@
+"""Cost-based optimizer: plan-shape goldens (join reordering, semi-join
+siding), CSE node counts, estimate accuracy (bounded q-error), the stats
+layer feeding it (NDV / histograms / MCV counts, delta-maintained), and the
+cost-aware inter-buffer admission policy."""
+import numpy as np
+import pytest
+
+from repro.core import GredoEngine, InterBuffer, optimizer, physical
+from repro.core.deltastore import DeltaConfig
+from repro.core.schema import (AnalyticsTask, GCDIATask, JoinPred, Predicate,
+                               Query, chain_pattern)
+from repro.core.storage import Database, DictColumn, Graph, Table, compute_stats
+from repro.data import m2bench
+
+
+@pytest.fixture(scope="module")
+def db():
+    return m2bench.generate(sf=1)
+
+
+def _rows_multiset(t: Table):
+    cols = sorted(t.columns)
+    out = []
+    for i in range(t.nrows):
+        row = []
+        for c in cols:
+            col = t.col(c)
+            v = col.codes[i] if hasattr(col, "codes") else np.asarray(col)[i]
+            row.append(v.item() if hasattr(v, "item") else v)
+        out.append(tuple(row))
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# Plan-shape goldens: reordering + siding on the skewed 3-join query
+# ---------------------------------------------------------------------------
+
+SKEW_NAIVE = """\
+Project[Customer.id, t.tid]
+  EquiJoin[Product.id=Orders.product_id]
+    Alias[Product]
+      Select[Product.title == 'Yogurt']
+        ScanTable[Product]
+    EquiJoin[Orders.customer_id=Customer.id]
+      Alias[Orders]
+        ScanTable[Orders]
+      EquiJoin[Customer.person_id=p.pid]
+        Alias[Customer]
+          ScanTable[Customer]
+        GraphProject[Interested_in keep=p,t]
+          MatchPattern[Interested_in dir=rev hops=1 pushed=t:1 deferred=-]"""
+
+SKEW_OPTIMIZED = """\
+Project[Customer.id, t.tid]
+  EquiJoin[p.pid=Customer.person_id]
+    GraphProject[Interested_in keep=p,t]
+      MatchPattern[Interested_in dir=rev hops=1 pushed=t:1 deferred=-]
+    EquiJoin[Customer.id=Orders.customer_id]
+      Alias[Customer]
+        PruneCols[id, person_id]
+          ScanTable[Customer]
+      EquiJoin[Orders.product_id=Product.id]
+        Alias[Orders]
+          PruneCols[customer_id, product_id]
+            ScanTable[Orders]
+        Alias[Product]
+          PruneCols[id]
+            Select[Product.title == 'Yogurt']
+              ScanTable[Product]"""
+
+
+def test_skewed_three_join_is_reordered(db):
+    """The naive DAG follows the (deliberately bad) query order — graph ⋈
+    Customer ⋈ Orders first, the selective Product filter last. The
+    optimizer flips it to smallest-intermediate-first."""
+    eng = GredoEngine(db)
+    q = m2bench.q_opt_skew()
+    assert physical.explain(eng.physical_plan(q)) == SKEW_NAIVE
+    assert physical.explain(eng.optimized_plan(q)) == SKEW_OPTIMIZED
+    # and it is semantics-preserving
+    naive = GredoEngine(db, enable_optimizer=False).query(q)
+    opt = eng.query(q)
+    assert _rows_multiset(naive) == _rows_multiset(opt)
+    assert any(n.startswith("join-order") for n in eng.last_stats.rewrites)
+
+
+def test_semi_join_siding_picks_graph_mask_on_g4(db):
+    """q_g4's Customer↔pattern join: the cost model picks the graph-side
+    candidate mask (Eq. 9/10), an explicit SemiJoinMask child of the match."""
+    eng = GredoEngine(db)
+    dag = eng.optimized_plan(m2bench.q_g4())
+    rendered = physical.explain(dag)
+    assert "SemiJoinMask[Persons.pid ∈ person_id]" in rendered
+    assert any("semi-join" in n and "graph-side mask" in n
+               for n in eng.last_report.notes())
+
+
+def test_optimizer_preserves_semantics_across_workload(db):
+    for qname in ("q_g1", "q_g2", "q_g3", "q_g4", "q_g5", "q_opt_skew",
+                  "q_edge_scan", "q_vertex_scan"):
+        q = getattr(m2bench, qname)()
+        naive = GredoEngine(db, enable_optimizer=False).query(q)
+        opt = GredoEngine(db).query(q)
+        assert _rows_multiset(naive) == _rows_multiset(opt), qname
+
+
+def test_build_side_is_the_smaller_input(db):
+    """Every EquiJoin in an optimized plan puts the smaller estimated input
+    on the right (build/sorted) side of the sort-merge."""
+    eng = GredoEngine(db)
+    dag = eng.optimized_plan(m2bench.q_opt_skew())
+    ests = physical.estimate(dag, db)
+
+    def walk(n):
+        if isinstance(n, physical.EquiJoin):
+            l, r = n.children
+            assert ests[id(r)][0] <= ests[id(l)][0], n.describe()
+        for c in n.children:
+            walk(c)
+
+    walk(dag)
+
+
+# ---------------------------------------------------------------------------
+# CSE
+# ---------------------------------------------------------------------------
+
+
+def _count_nodes(root):
+    seen = set()
+
+    def walk(n):
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        for c in n.children:
+            walk(c)
+
+    walk(root)
+    return len(seen)
+
+
+def test_cse_unifies_duplicate_subtrees():
+    """Two structurally identical Select(ScanTable) subtrees collapse into
+    one shared node; the executor then runs the subtree once."""
+    db = m2bench.generate(sf=1)
+    ep = db.epoch_of("Customer")
+    pred = Predicate("Customer.age", ">=", 30)
+    a = physical.Select(physical.ScanTable("Customer", ep), [pred])
+    b = physical.Select(physical.ScanTable("Customer", ep), [pred])
+    jp = JoinPred("Customer.id", "Customer.id")
+    join = physical.EquiJoin(jp, a, b)
+    root = physical.Project(("Customer.id",), (("Customer", ep),), join)
+    assert _count_nodes(root) == 6
+    opt, report = optimizer.optimize(root, db)
+    assert _count_nodes(opt) == 4               # one Select+Scan pair shared
+    l, r = opt.children[0].children
+    assert l is r
+    assert any("cse" in n for n in report.notes())
+
+
+def test_cse_shares_mask_and_cluster_scan(db):
+    """In q_g4 the Customer subtree feeds both the semi-join mask and the
+    join cluster: after CSE it is literally the same (pruned) node."""
+    eng = GredoEngine(db)
+    dag = eng.optimized_plan(m2bench.q_g4())
+    assert "^shared:" in physical.explain(dag)
+    scans = [o for o in _collect_kinds(dag, physical.ScanTable)
+             if o.name == "Customer"]
+    assert len(scans) == 1
+
+
+def _collect_kinds(root, cls):
+    out, seen = [], set()
+
+    def walk(n):
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        if isinstance(n, cls):
+            out.append(n)
+        for c in n.children:
+            walk(c)
+
+    walk(root)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Selection sink-down (physical-level pushdown, exercised on a dual-mode DAG)
+# ---------------------------------------------------------------------------
+
+
+def test_selection_sinks_below_joins_into_scan(db):
+    """A dual-mode DAG carries table predicates as a Residual above the
+    joins; optimize() sinks them into a Select directly above the scan."""
+    eng = GredoEngine(db, mode="dual")
+    q = m2bench.q_g2()
+    naive = eng.physical_plan(q)
+    assert "Residual" in physical.explain(naive)
+    opt, report = optimizer.optimize(naive, db)
+    rendered = physical.explain(opt)
+    assert "Residual" not in rendered
+    assert "Select[Orders.shipping.days <= 3]" in rendered
+    assert any("sink-down" in n for n in report.notes())
+    r_naive = physical.execute(naive, physical.ExecContext(db))
+    r_opt = physical.execute(opt, physical.ExecContext(db))
+    assert _rows_multiset(r_naive) == _rows_multiset(r_opt)
+
+
+# ---------------------------------------------------------------------------
+# Table-side semi-join siding (SemiJoinReduce)
+# ---------------------------------------------------------------------------
+
+
+def _wide_key_db(n_tbl=20_000, n_v=40, key_dom=20_000):
+    """A tiny vertex set joined against a huge table whose keys mostly miss:
+    masking the graph is useless (every vertex stays a candidate), while
+    reducing the table by the vertex keys shrinks it ~500x."""
+    rng = np.random.default_rng(0)
+    db = Database()
+    persons = Table("P", {"pid": np.arange(n_v, dtype=np.int64)})
+    tags = Table("T", {"tid": np.arange(8, dtype=np.int64)})
+    edges = Table("E", {"svid": rng.integers(0, n_v, 200).astype(np.int64),
+                        "tvid": rng.integers(0, 8, 200).astype(np.int64)})
+    db.add_graph(Graph("G", {"P": persons, "T": tags}, edges, "P", "T"))
+    db.add_table(Table("C", {
+        "id": np.arange(n_tbl, dtype=np.int64),
+        "person_id": rng.integers(0, key_dom, n_tbl).astype(np.int64)}))
+    q = Query(select=("C.id", "t.tid"), froms=("C",),
+              match=chain_pattern("G", ("p", "P", "E", "t", "T")),
+              joins=(JoinPred("C.person_id", "p.pid"),))
+    return db, q
+
+
+def test_semi_join_sides_onto_the_table_when_vertices_are_small():
+    db, q = _wide_key_db()
+    eng = GredoEngine(db)
+    dag = eng.optimized_plan(q)
+    rendered = physical.explain(dag)
+    assert "SemiJoinReduce[person_id ∈ P.pid]" in rendered
+    assert any("table-side reduce" in n for n in eng.last_report.notes())
+    naive = GredoEngine(db, enable_optimizer=False).query(q)
+    opt = eng.query(q)
+    assert _rows_multiset(naive) == _rows_multiset(opt)
+    # the reduce actually shrank the join input
+    reduce_ops = [o for o in eng.last_stats.operators
+                  if o["op"] == "SemiJoinReduce"]
+    assert reduce_ops and reduce_ops[0]["rows"] < 20_000 / 100
+
+
+# ---------------------------------------------------------------------------
+# Estimate accuracy: bounded q-error on seeded data
+# ---------------------------------------------------------------------------
+
+CHECKED_KINDS = ("ScanTable", "Select", "MatchPattern", "EquiJoin",
+                 "GraphProject", "Project", "VertexScan", "EdgeScan")
+
+
+def test_est_rows_within_bounded_q_error(db):
+    """§6.3 estimates against actuals, per operator: q-error (max of
+    over/under-estimation factor) stays bounded on the seeded M2Bench data.
+    Value-aware selectivity + label-aware hop expansion keep it tight."""
+    worst = 0.0
+    for qname in ("q_g1", "q_g2", "q_g4", "q_opt_skew", "q_vertex_scan",
+                  "q_edge_scan"):
+        eng = GredoEngine(db)
+        eng.query(getattr(m2bench, qname)())
+        ests = eng.last_ests
+
+        def walk(n, seen):
+            nonlocal worst
+            if id(n) in seen:
+                return
+            seen.add(id(n))
+            if n.kind in CHECKED_KINDS and n.stats.executed \
+                    and n.stats.rows and id(n) in ests:
+                est = ests[id(n)][0]
+                qerr = max(est / n.stats.rows, n.stats.rows / max(est, 1e-9))
+                assert qerr <= 16.0, (qname, n.describe(), est, n.stats.rows)
+                worst = max(worst, qerr)
+            for c in n.children:
+                walk(c, seen)
+
+        walk(eng.last_dag, set())
+    assert worst < 16.0
+
+
+def test_root_estimate_close_on_g1(db):
+    """The end-to-end cardinality estimate of q_g1 lands within 2x."""
+    eng = GredoEngine(db)
+    r = eng.query(m2bench.q_g1())
+    est = eng.last_ests[id(eng.last_dag)][0]
+    assert 0.5 <= est / r.nrows <= 2.0
+
+
+# ---------------------------------------------------------------------------
+# Stats layer: NDV / MCV / histograms, delta maintenance
+# ---------------------------------------------------------------------------
+
+
+def test_dict_column_equality_selectivity_is_value_exact():
+    col = DictColumn(values=["a"] * 90 + ["b"] * 9 + ["c"])
+    s = compute_stats(col)
+    assert s.ndv == 3
+    assert s.selectivity(Predicate("t.x", "==", "a")) == pytest.approx(0.9)
+    assert s.selectivity(Predicate("t.x", "==", "c")) == pytest.approx(0.01)
+    assert s.selectivity(Predicate("t.x", "==", "nope")) == 0.0
+    assert s.selectivity(Predicate("t.x", "in", ["b", "c"])) == pytest.approx(0.1)
+
+
+def test_histogram_range_selectivity():
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([rng.uniform(0, 1, 9000), rng.uniform(9, 10, 1000)])
+    s = compute_stats(vals)
+    # a uniform-span model would say ~10% for [0,1]; the histogram knows 90%
+    frac = s.selectivity(Predicate("t.x", "range", 0.0, 1.0))
+    assert 0.8 <= frac <= 1.0
+    frac_hi = s.selectivity(Predicate("t.x", ">", 9.0))
+    assert 0.05 <= frac_hi <= 0.15
+
+
+def test_stats_maintained_across_delta_appends():
+    """The merged base ⊕ delta views carry incrementally-maintained stats:
+    NDV/min/max/histogram reflect appended rows without an O(base) pass."""
+    g = _stats_graph()
+    g.insert_vertices("A", {"v": np.array([500.0, 600.0]),
+                            "tag": ["z", "x"]})
+    vt = g.vertex_tables["A"]
+    sv = vt.stats("v")
+    assert sv.n == 12 and sv.vmax == 600.0
+    assert sv.hist is not None and sv.hist.sum() == pytest.approx(12)
+    st = vt.stats("tag")
+    assert st.n == 12 and st.value_counts["z"] == 1
+    # equality selectivity is exact on the merged view
+    assert st.selectivity(Predicate("A.tag", "==", "z")) == pytest.approx(1 / 12)
+
+
+def _stats_graph():
+    vt = Table("A", {"v": np.arange(10, dtype=np.float64),
+                     "tag": DictColumn(values=[("x", "y")[i % 2]
+                                               for i in range(10)])})
+    edges = Table("E", {"svid": np.arange(10, dtype=np.int64) % 5,
+                        "tvid": np.arange(10, dtype=np.int64) % 7})
+    return Graph("G", {"A": vt}, edges, "A", "A",
+                 delta_config=DeltaConfig(auto_compact=False))
+
+
+def test_live_edge_stats_consistent_with_pending_delta():
+    """n_live_edges / avg_out_degree / hop_expansion track pending delta
+    segments and tombstones, so the optimizer never plans against a stale
+    edge count between compactions."""
+    g = _stats_graph()
+    e0, d0 = g.n_live_edges, g.avg_out_degree
+    assert g.hop_expansion() == pytest.approx(e0 / 10)
+    g.insert_edges({"svid": np.array([0, 1]), "tvid": np.array([2, 3])})
+    assert g.n_live_edges == e0 + 2
+    assert g.avg_out_degree == pytest.approx((e0 + 2) / 10) != d0
+    assert g.hop_expansion() == pytest.approx((e0 + 2) / 10)
+    g.delete_edges(np.array([0, 1, 2]))
+    assert g.n_live_edges == e0 - 1
+    assert g.hop_expansion(reverse=True) == pytest.approx((e0 - 1) / 10)
+    # vertex inserts change the per-label fan-out denominator too
+    g.insert_vertices("A", {"v": np.array([11.0]), "tag": ["x"]})
+    assert g.hop_expansion() == pytest.approx((e0 - 1) / 11)
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware inter-buffer admission
+# ---------------------------------------------------------------------------
+
+
+def test_admission_bypasses_cheap_bulky_entries():
+    buf = InterBuffer(capacity_bytes=1 << 20, admit_cost_per_byte=1.0)
+    big = np.ones((4096,), np.float32)          # 16 KiB
+    assert buf.put("cheap", big, est_cost=10.0) is not None
+    assert len(buf) == 0 and buf.bypasses == 1  # recompute is cheaper: bypass
+    buf.put("costly", big, est_cost=1e9)
+    assert len(buf) == 1 and buf.get("costly") is not None
+    buf.put("unknown", big)                     # no estimate -> admitted
+    assert len(buf) == 2
+
+
+def test_engine_admission_threshold_bypasses_and_counts():
+    """With an absurd threshold every cacheable node bypasses: no reuse on
+    the repeated task, and the bypass counter surfaces in explain_last."""
+    db = m2bench.generate(sf=1)
+    eng = GredoEngine(db, admit_cost_per_byte=1e12)
+    t = GCDIATask(integration=m2bench.q_g1(),
+                  analytics=AnalyticsTask(
+                      "MULTIPLY", [("rel2matrix", ("Customer.id", "t.tid"))]))
+    eng.analyze(t)
+    assert len(eng.interbuffer) == 0 and eng.interbuffer.bypasses > 0
+    eng.analyze(t)
+    assert eng.interbuffer.hits == 0            # nothing was admitted
+    assert "bypasses=" in eng.explain_last()
+
+
+def test_default_admission_keeps_expensive_gcdi_reuse():
+    """The default footprint-scaled threshold admits real GCDI/GCDA results:
+    the §6.4 reuse ladder still short-circuits repeated tasks."""
+    db = m2bench.generate(sf=1)
+    eng = GredoEngine(db)
+    t = GCDIATask(integration=m2bench.q_g1(),
+                  analytics=AnalyticsTask(
+                      "SIMILARITY", [("random", "Customer.id", "t.tid",
+                                      m2bench.N_TAGS)]))
+    eng.analyze(t)
+    assert eng.interbuffer.bypasses == 0
+    eng.analyze(t)
+    assert eng.last_stats.interbuffer_hit

@@ -133,8 +133,14 @@ def test_predicate_replication_across_join():
                p.pattern_plan.deferred.get("p", []))
 
 
-def test_join_pushdown_fires_on_selective_join():
+def test_join_pushdown_candidates_detected():
+    """The planner's mechanism-2 decision is now purely logical: it flags
+    which joins are graph↔table pushdown candidates; the cost-based siding
+    (Eq. 8 vs 9/10, graph mask vs table reduce) lives in the optimizer."""
     db = m2bench.generate(sf=1)
     p = planner.plan(db, m2bench.q_g4())
-    assert isinstance(p.semi_join_idx, set)  # decision is cost-based
-    assert any("join" in n for n in p.notes)
+    assert p.semi_join_idx == {2}            # Customer.person_id = p.pid
+    assert any("join-pushdown candidate" in n for n in p.notes)
+    # candidates are off with optimizations disabled (GredoDB-D ablation)
+    p_raw = planner.plan(db, m2bench.q_g4(), enable_opt=False)
+    assert p_raw.semi_join_idx == set()
