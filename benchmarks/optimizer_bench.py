@@ -1,11 +1,18 @@
-"""Cost-based optimizer benchmark: naive-order vs. optimized DAG latency.
+"""Cost-based optimizer benchmark: naive-order vs. optimized DAG latency,
+plus cardinality quality on the Zipfian-skew fixture.
 
-Runs each M2Bench-style multi-join query twice through the same engine
-path — once with the optimizer disabled (the naive query-order DAG the
-builder emits) and once with the full rewrite pass (join reordering,
-semi-join siding, CSE, selection/projection sink-down) — and reports the
-wall-clock ratio, the per-operator intermediate sizes, and the root
-est_rows vs. actual rows (plan-quality check).
+Part 1 (``optimizer_gain``) runs each M2Bench-style multi-join query twice
+through the same engine path — once with the optimizer disabled (the naive
+query-order DAG the builder emits) and once with the full rewrite pass
+(DP join enumeration, semi-join siding, CSE, selection/projection
+sink-down) — and reports the wall-clock ratio, the per-operator
+intermediate sizes, and the root est_rows vs. actual rows.
+
+Part 2 (``cardinality_quality``) measures the histogram-overlap join model
+against the NDV-only baseline on ``m2bench.generate_skew``: root-level
+q-error of the skewed 3-join query under both estimators, and the bushy DP
+plan vs. the *best* left-deep plan (``join_enum="dp-leftdeep"``) on the
+4-source query.
 
     PYTHONPATH=src python -m benchmarks.run --suite optimizer [--sf N]
 """
@@ -64,9 +71,87 @@ def optimizer_gain(sf: int = 2, repeat: int = 5) -> list[dict]:
     return rows
 
 
+def _root_qerror(eng) -> float:
+    actual = max(eng.last_stats.operators[0]["rows"] or 0, 1)
+    est = eng.last_ests[id(eng.last_dag)][0]
+    return max(est / actual, actual / max(est, 1e-9))
+
+
+def cardinality_quality(sf: int = 1, repeat: int = 3) -> list[dict]:
+    """Histogram-overlap vs. NDV-only estimates on the Zipfian fixture, and
+    bushy DP vs. best left-deep on the 4-source query."""
+    db = m2bench.generate_skew(sf=sf)
+    rows: list[dict] = []
+
+    # -- skewed 3-join: root q-error under both join-estimate models -------
+    q = m2bench.q_skew_3join()
+    eng = GredoEngine(db)
+    n_rows = eng.query(q).nrows
+    q_hist = _root_qerror(eng)
+    physical.HIST_JOIN_EST = False
+    try:
+        eng_ndv = GredoEngine(db)
+        assert eng_ndv.query(q).nrows == n_rows
+        q_ndv = _root_qerror(eng_ndv)
+    finally:
+        physical.HIST_JOIN_EST = True
+    rows.append({
+        "table": "cardinality_quality", "sf": sf, "query": "q_skew_3join",
+        "rows": n_rows,
+        "q_error_hist": q_hist, "q_error_ndv": q_ndv,
+        "ndv_over_hist": q_ndv / max(q_hist, 1e-9),
+        "seconds": _best_seconds(eng, q, repeat),
+    })
+
+    # -- 4-source bushy query: DP bushy vs best left-deep ------------------
+    qb = m2bench.q_bushy_4src()
+    bushy_eng = GredoEngine(db)
+    ld_eng = GredoEngine(db, join_enum="dp-leftdeep")
+    nb = bushy_eng.query(qb).nrows
+    assert ld_eng.query(qb).nrows == nb
+
+    def max_join_rows(e):
+        return max((o["rows"] or 0) for o in e.last_stats.operators
+                   if o["op"] == "EquiJoin")
+
+    bushy_s = _best_seconds(bushy_eng, qb, repeat)
+    ld_s = _best_seconds(ld_eng, qb, repeat)
+    rows.append({
+        "table": "cardinality_quality", "sf": sf, "query": "q_bushy_4src",
+        "rows": nb,
+        "bushy_selected": any(n.startswith("join-order: dp bushy")
+                              for n in bushy_eng.last_stats.rewrites),
+        "bushy_s": bushy_s, "best_leftdeep_s": ld_s,
+        "speedup_vs_leftdeep": ld_s / max(bushy_s, 1e-9),
+        "bushy_join_rows": max_join_rows(bushy_eng),
+        "leftdeep_join_rows": max_join_rows(ld_eng),
+        "rewrites": (bushy_eng.last_report.notes()
+                     if bushy_eng.last_report else []),
+    })
+    return rows
+
+
 def print_rows(rows: list[dict]) -> None:
     import sys
     for r in rows:
+        if r.get("table") == "cardinality_quality":
+            if r["query"] == "q_skew_3join":
+                print(f"cardest_{r['query']}_sf{r['sf']},"
+                      f"{r['seconds']*1e6:.1f},"
+                      f"q_error_hist={r['q_error_hist']:.2f};"
+                      f"q_error_ndv={r['q_error_ndv']:.2f};"
+                      f"ndv_over_hist={r['ndv_over_hist']:.1f}")
+            else:
+                print(f"cardest_{r['query']}_sf{r['sf']},"
+                      f"{r['bushy_s']*1e6:.1f},"
+                      f"bushy_selected={r['bushy_selected']};"
+                      f"speedup_vs_best_leftdeep="
+                      f"{r['speedup_vs_leftdeep']:.2f};"
+                      f"join_rows={r['leftdeep_join_rows']}"
+                      f"->{r['bushy_join_rows']}")
+            for n in r.get("rewrites", []):
+                print(f"#   {n}", file=sys.stderr)
+            continue
         print(f"optimizer_{r['query']}_sf{r['sf']},{r['opt_s']*1e6:.1f},"
               f"speedup_vs_naive={r['speedup']:.2f};"
               f"join_rows={r['naive_join_rows']}->{r['opt_join_rows']};"
@@ -76,4 +161,4 @@ def print_rows(rows: list[dict]) -> None:
 
 
 if __name__ == "__main__":
-    print_rows(optimizer_gain())
+    print_rows(optimizer_gain() + cardinality_quality())

@@ -37,12 +37,16 @@ def _gcdia_suite(sf: int) -> list[dict]:
 
 
 def _optimizer_suite(sf: int, fast: bool) -> list[dict]:
-    """Cost-based optimizer: naive query-order DAG vs. rewritten DAG (join
-    reordering / semi-join siding / CSE / sink-down) on multi-join queries.
+    """Cost-based optimizer: naive query-order DAG vs. rewritten DAG (DP
+    join enumeration / semi-join siding / CSE / sink-down) on multi-join
+    queries, plus cardinality quality on the Zipfian-skew fixture
+    (histogram-overlap vs. NDV-only q-error; bushy DP vs. best left-deep).
     The rewrite overhead is ~1ms/query, so the latency win grows with --sf
     (the Makefile's bench-optimizer target uses --sf 2)."""
     from . import optimizer_bench
-    rows = optimizer_bench.optimizer_gain(sf=sf, repeat=2 if fast else 5)
+    repeat = 2 if fast else 5
+    rows = optimizer_bench.optimizer_gain(sf=sf, repeat=repeat)
+    rows += optimizer_bench.cardinality_quality(sf=sf, repeat=repeat)
     optimizer_bench.print_rows(rows)
     return rows
 

@@ -74,6 +74,14 @@ def cost_project(n: int, n_attrs: int) -> float:
     return n * max(n_attrs, 1) * (COST_IO + COST_CPU)
 
 
+def cost_filter(n: float, n_preds: int = 1) -> float:
+    """Post-scan/post-join predicate application (Select residue,
+    IntraFilter, Residual): one vector-lane compare per (row, predicate).
+    Shared by ``physical.estimate`` and the optimizer's join enumerator so
+    both charge identical prices for folding a predicate into a plan."""
+    return float(n) * max(n_preds, 1) * COST_CPU
+
+
 def cost_semijoin(n_left: int, n_right: int) -> float:
     """Semi-join reduction (Eq. 9/10 mask build): sort the smaller key set,
     binary-probe the larger — no output expansion."""

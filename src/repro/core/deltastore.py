@@ -299,8 +299,11 @@ class ColumnMerger:
             self.buf = Growable(np.asarray(base))
             arr = np.asarray(base)
             # incremental §6.3 stats ride along for numeric columns: each
-            # absorbed run extends min/max/histogram/NDV in O(batch), so the
-            # optimizer sees fresh statistics without an O(base) recompute
+            # absorbed run extends min/max/histogram/MCV counts/NDV in
+            # O(batch), so the optimizer sees fresh statistics — including
+            # the histogram-overlap join model (ColumnStats.join_overlap),
+            # whose bucket/MCV inputs these are — without an O(base)
+            # recompute
             self.stats = compute_stats(arr) if arr.dtype.kind in "ifu" else None
 
     def absorb(self, runs: list) -> None:
@@ -335,8 +338,13 @@ class ColumnMerger:
         self.n_runs = len(runs)
 
     def stats_view(self):
-        """Current ColumnStats maintained across absorbs, or None when the
-        column kind falls back to lazy recomputation (ragged columns)."""
+        """Current ColumnStats maintained across absorbs (dict columns
+        rebuild exact MCV counts from the incrementally-kept per-code
+        totals; numeric columns carry the extended histogram/MCV object),
+        or None when the column kind falls back to lazy recomputation
+        (ragged columns). These are the distributions the optimizer's
+        ``join_overlap`` estimates read, so merged base ⊕ delta views keep
+        distribution-aware join cardinalities current per append."""
         from .storage import dict_stats
         if self.kind == "dict":
             return dict_stats(self.codes.n, self.vocab.view(),

@@ -59,13 +59,21 @@ class GredoEngine:
     def __init__(self, db: Database, mode: str = "gredo",
                  interbuffer_bytes: int = 2 << 30,
                  enable_optimizer: bool = True,
-                 admit_cost_per_byte: float = 0.05):
+                 admit_cost_per_byte: float = 0.05,
+                 join_enum: str = "dp"):
         assert mode in ("gredo", "dual", "single")
+        assert join_enum in ("dp", "dp-leftdeep", "greedy")
         self.db = db
         self.mode = mode
         self.enable_optimizer = enable_optimizer
+        self.join_enum = join_enum
         self.interbuffer = InterBuffer(interbuffer_bytes,
                                        admit_cost_per_byte=admit_cost_per_byte)
+        # §6.3 estimate memo shared across this engine's planner invocations;
+        # keyed on the catalog write-epoch snapshot inside optimize(), so a
+        # delta-store append invalidates every cached cardinality (and the
+        # plan decisions that would have been built on them)
+        self._opt_cache: dict = {}
         self.last_stats: Optional[ExecStats] = None
         self.last_dag: Optional[physical.PhysicalOp] = None
         self.last_naive_dag: Optional[physical.PhysicalOp] = None
@@ -109,7 +117,8 @@ class GredoEngine:
         """Apply the cost-based optimizer in full-system mode. The ablation
         variants (-D / -S) run the naive DAG, as in the paper."""
         if self.mode == "gredo" and self.enable_optimizer:
-            return optimizer_mod.optimize(dag, self.db)
+            return optimizer_mod.optimize(dag, self.db, cache=self._opt_cache,
+                                          join_enum=self.join_enum)
         return dag, None
 
     def query(self, q: Query) -> Table:

@@ -709,6 +709,14 @@ def resolve_key_stats(db: Database, src):
     return None
 
 
+def catalog_epochs(db: Database) -> tuple:
+    """Write-epoch snapshot of every collection in the catalog — the key
+    that gates reuse of cached §6.3 estimates across planner invocations
+    (a delta-store append bumps its source epoch and invalidates them)."""
+    names = sorted(set(db.tables) | set(db.graphs))
+    return tuple((n, db.epoch_of(n)) for n in names)
+
+
 def pick_connected_cluster(clusters: list, needed: list):
     """Select the cluster (node, column-set pairs) covering every needed
     attribute when joins left more than one behind. Raises on a genuinely
@@ -723,18 +731,57 @@ def pick_connected_cluster(clusters: list, needed: list):
     return clusters[scored[0][1]][0]
 
 
+# Distribution-aware join estimation toggle. True (default): per-key /
+# per-bucket overlap of the two key distributions (ColumnStats.join_overlap)
+# with NDV containment only as fallback. False: the pre-histogram NDV-only
+# model — kept as the measurable baseline for q-error regressions
+# (benchmarks/run.py --suite optimizer toggles it to report both).
+HIST_JOIN_EST = True
+
+
 def est_join_rows(nl: float, nr: float, ls, rs) -> float:
-    """|L ⋈ R| under the uniform-key model: nl·nr / max(ndv) with NDVs
-    capped by the (possibly filtered) input cardinalities. Falls back to
-    max(nl, nr) when neither key resolves to base statistics."""
+    return est_join_rows_detail(nl, nr, ls, rs)[0]
+
+
+def est_join_rows_detail(nl: float, nr: float, ls, rs) -> tuple[float, str]:
+    """|L ⋈ R| with estimate provenance, as ``(rows, how)``.
+
+    Distribution-aware path: ``ls.join_overlap(rs)`` gives the expected
+    matches between the two *base* key columns (exact per-value products for
+    MCV/dict columns, per-equi-width-bucket-pair overlap otherwise); the
+    filtered-input selectivities are threaded into those bucket counts by
+    scaling with ``(nl / |L_base|) · (nr / |R_base|)`` — the fraction of
+    each base side actually flowing into the join (uniform-filter
+    assumption; fan-out of earlier joins scales the same way, > 1).
+
+    Fallback (``how == "ndv"``): uniform-key containment nl·nr / max(ndv)
+    with NDVs capped by the (possibly filtered) input cardinalities; when
+    neither key resolves to base statistics, max(nl, nr)."""
+    if (HIST_JOIN_EST and ls is not None and rs is not None
+            and ls.n and rs.n):
+        ov = ls.join_overlap(rs)
+        if ov is not None:
+            matches, how = ov
+            return matches * (nl / ls.n) * (nr / rs.n), how
     ndvs = []
     if ls is not None and ls.ndv:
         ndvs.append(min(float(ls.ndv), max(nl, 1.0)))
     if rs is not None and rs.ndv:
         ndvs.append(min(float(rs.ndv), max(nr, 1.0)))
     if not ndvs:
-        return float(max(nl, nr))
-    return nl * nr / max(max(ndvs), 1.0)
+        return float(max(nl, nr)), "no-stats"
+    return nl * nr / max(max(ndvs), 1.0), "ndv"
+
+
+def est_intra_filter_rows(rows: float, ls, rs) -> float:
+    """Rows surviving an IntraFilter (a join predicate whose sides already
+    live in one cluster): divide by the larger key NDV, clamped to the
+    input cardinality; 3.0 default when neither key resolves. The single
+    formula shared by :func:`estimate` and the optimizer's join enumerator
+    — their costs must agree or the DP picks orders the final cost model
+    contradicts."""
+    ndv = max((float(s.ndv) for s in (ls, rs) if s is not None), default=3.0)
+    return rows / max(min(ndv, max(rows, 1.0)), 1.0)
 
 
 def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
@@ -923,11 +970,16 @@ def estimate(root: PhysicalOp, db: Database,
     estimated price of recomputing the node from base collections.
     Returns ``{id(node): (est_rows, est_cost)}``.
 
-    ``_cache`` (optional) memoizes per-node results across repeated calls
-    while the catalog is unchanged — the optimizer threads one through its
-    passes so candidate evaluation doesn't re-derive shared subtrees.
-    Entries keep a reference to their node, so ids stay unique for the
-    cache's lifetime."""
+    ``_cache`` (optional) memoizes per-node results across repeated calls,
+    keyed by the node's *signature* — the canonical structural fingerprint
+    that embeds every source collection's write epoch. A cached estimate is
+    therefore valid for any structurally identical node (across the
+    optimizer's candidate plans *and* across queries), and a delta-store
+    append changes the source epoch, the signature, and hence the cache
+    key — stale cardinalities can never be replayed. The optimizer
+    additionally clears its shared cache on any catalog-epoch change
+    (``optimizer.optimize``), which garbage-collects entries the new
+    signatures would never hit."""
     from . import cost as cost_mod
     rows_of: dict[int, float] = {}     # est rows per node
     own: dict[int, float] = {}         # the operator's own (non-subtree) cost
@@ -958,11 +1010,13 @@ def estimate(root: PhysicalOp, db: Database,
             return rows_of[id(n)]
         nodes[id(n)] = n
         if _cache is not None:
-            ent = _cache.get(id(n))
-            if ent is not None and ent[0] is n:
-                rows_of[id(n)], own[id(n)], width[id(n)] = ent[1]
+            ent = _cache.get(n.signature())
+            if ent is not None:
+                rows_of[id(n)], own[id(n)], width[id(n)] = ent[0]
+                if ent[1] is not None:
+                    cum[id(n)] = ent[1]
                 if ent[2] is not None:
-                    cum[id(n)] = ent[2]
+                    n.est_src = ent[2]
                 for c in n.children:    # register descendants for dedup sums
                     walk(c)
                 return rows_of[id(n)]
@@ -974,7 +1028,7 @@ def estimate(root: PhysicalOp, db: Database,
         elif isinstance(n, Select):
             s = sel(db.tables[n.preds[0].collection], n.preds) if n.preds else 1.0
             rows = first * s
-            cost = first * len(n.preds) * cost_mod.COST_CPU
+            cost = cost_mod.cost_filter(first, len(n.preds))
         elif isinstance(n, PruneCols):
             rows = first
             cost = len(n.cols) * cost_mod.COST_CPU
@@ -1013,7 +1067,15 @@ def estimate(root: PhysicalOp, db: Database,
                 else:
                     filter_frac *= frac
             hops = len(p.pattern.edges)
-            fanout = g.hop_expansion(reverse=p.reverse)
+            # per-hop, label-aware expansion: each hop's fan-out is the
+            # live-edge count over *that hop's* source-label population (the
+            # traversal-order chain, so reverse directions and mixed-label
+            # paths stop compounding one global average)
+            hop_order = chain[::-1] if p.reverse else chain
+            fanouts = [g.hop_expansion(reverse=p.reverse,
+                                       label=p.pattern.vertex(v).label)
+                       for v in hop_order[:-1]]
+            expansion = float(np.prod(fanouts)) if fanouts else 1.0
             # end/interior pushed predicates filter the expansion too
             end_sel = 1.0
             for var, ps in p.pushed.items():
@@ -1022,21 +1084,35 @@ def estimate(root: PhysicalOp, db: Database,
                 vtbl = (g.edges if any(e.var == var for e in p.pattern.edges)
                         else g.vertex_tables[p.pattern.vertex(var).label])
                 end_sel *= sel(vtbl, ps)
-            rows = n_start * (fanout ** hops) * filter_frac * end_sel
+            rows = n_start * expansion * filter_frac * end_sel
+            # Eq. 11-13 charge per-hop traversal work off one fan-out
+            # scalar; feed it the geometric mean of the per-hop values
+            gm_fanout = expansion ** (1.0 / hops) if hops else 0.0
             cost = cost_mod.cost_pattern(
                 sum(len(ps) for v, ps in p.pushed.items()
                     if not any(e.var == v for e in p.pattern.edges)),
                 sum(len(ps) for v, ps in p.pushed.items()
                     if any(e.var == v for e in p.pattern.edges)),
                 g.n_vertices, g.n_live_edges, n_start, hops,
-                fanout, rows,
+                gm_fanout, rows,
                 sum(len(ps) for ps in p.deferred.values()))
         elif isinstance(n, TableJoinMatch):
             g = db.graphs[n.graph]
             hops = len(n.pattern.edges)
             e = g.n_live_edges
-            rows = (float(e) * g.hop_expansion() ** (hops - 1) if hops
-                    else float(g.vertex_tables[n.pattern.vertices[0].label].nrows))
+            if hops:
+                # k-way edge-table joins: the first edge table contributes
+                # |E| rows; every later hop multiplies by the fan-out of its
+                # shared chain vertex, label-aware per hop (the pattern's
+                # own direction — not the graph-global forward average,
+                # which is wrong on reverse traversals of bipartite graphs)
+                tchain = ([n.pattern.vertices[0].var]
+                          + [ed.dst for ed in n.pattern.edges])
+                rows = float(e)
+                for v in tchain[1:-1]:
+                    rows *= g.hop_expansion(label=n.pattern.vertex(v).label)
+            else:
+                rows = float(g.vertex_tables[n.pattern.vertices[0].label].nrows)
             cost = sum(cost_mod.cost_join(rows, e) for _ in range(max(hops, 1)))
         elif isinstance(n, VertexScan):
             g = db.graphs[n.graph]
@@ -1055,21 +1131,20 @@ def estimate(root: PhysicalOp, db: Database,
         elif isinstance(n, EquiJoin):
             ls, rs = (resolve_key_stats(db, s)
                       for s in getattr(n, "key_src", (None, None)))
-            rows = est_join_rows(child_rows[0], child_rows[1], ls, rs)
+            rows, n.est_src = est_join_rows_detail(
+                child_rows[0], child_rows[1], ls, rs)
             cost = cost_mod.cost_join(child_rows[0], child_rows[1])
         elif isinstance(n, IntraFilter):
             ls, rs = (resolve_key_stats(db, s)
                       for s in getattr(n, "key_src", (None, None)))
-            ndv = max((float(s.ndv) for s in (ls, rs) if s is not None),
-                      default=3.0)
-            rows = first / max(min(ndv, max(first, 1.0)), 1.0)
-            cost = first * cost_mod.COST_CPU
+            rows = est_intra_filter_rows(first, ls, rs)
+            cost = cost_mod.cost_filter(first)
         elif isinstance(n, Residual):
             s = 1.0
             for pred in n.preds:
                 s *= pred_sel(pred)
             rows = first * s
-            cost = first * len(n.preds) * cost_mod.COST_CPU
+            cost = cost_mod.cost_filter(first, len(n.preds))
         elif isinstance(n, Rel2Matrix):
             rows = first
             width[id(n)] = float(len(n.columns))
@@ -1107,7 +1182,8 @@ def estimate(root: PhysicalOp, db: Database,
         rows_of[id(n)] = rows
         own[id(n)] = cost
         if _cache is not None:
-            _cache[id(n)] = [n, (rows, cost, width.get(id(n), 1.0)), None]
+            _cache[n.signature()] = [(rows, cost, width.get(id(n), 1.0)),
+                                     None, getattr(n, "est_src", None)]
         return rows
 
     walk(root)
@@ -1131,9 +1207,9 @@ def estimate(root: PhysicalOp, db: Database,
             stack.extend(m.children)
         cum[id(n)] = total
         if _cache is not None:
-            ent = _cache.get(id(n))
-            if ent is not None and ent[0] is n:
-                ent[2] = total
+            ent = _cache.get(n.signature())
+            if ent is not None:
+                ent[1] = total
         return total
 
     return {nid: (rows_of[nid], cumulative(m)) for nid, m in nodes.items()}
@@ -1196,6 +1272,9 @@ def explain(root: PhysicalOp, stats: bool = False,
             er, ec = ests[id(n)]
             bits.append(f"est_rows={er:.3g}")
             bits.append(f"est_cost={ec:.3g}")
+            src = getattr(n, "est_src", None)
+            if src is not None:     # join-estimate provenance (per-bucket
+                bits.append(f"est_via={src}")   # overlap vs NDV fallback)
         suffix = "  (" + ", ".join(bits) + ")" if bits else ""
         lines.append(f"{pad}{n.describe()}{suffix}")
         for c in n.children:

@@ -164,6 +164,69 @@ class ColumnStats:
     edges: Optional[np.ndarray] = None    # len(hist)+1 bucket boundaries
     value_counts: Optional[dict] = None   # value -> exact row count
 
+    def _has_hist(self) -> bool:
+        return (self.hist is not None and self.edges is not None
+                and len(self.edges) > 1 and float(self.hist.sum()) > 0)
+
+    def _bucket_ndvs(self) -> np.ndarray:
+        """Estimated distinct values per histogram bucket: NDV distributed
+        proportionally to bucket mass (and capped by the bucket count)."""
+        total = float(self.hist.sum())
+        nd = self.ndv * self.hist / total
+        return np.minimum(np.maximum(nd, 0.0), np.maximum(self.hist, 0.0))
+
+    def join_overlap(self, other: "ColumnStats"
+                     ) -> Optional[tuple[float, str]]:
+        """Expected equi-join matches |L ⋈ R| between the two *base* columns
+        (every row on both sides): Σ_k count_L(k) · count_R(k) over the join
+        keys k. Returns ``(matches, provenance)`` or ``None`` when neither
+        side carries a key distribution (caller falls back to NDV
+        containment).
+
+        * exact when both sides keep per-value MCV counts;
+        * point-mass × per-bucket density when one side has numeric MCV
+          counts and the other an equi-width histogram;
+        * per-bucket-pair overlap under a uniform-within-bucket containment
+          assumption when only histograms are available.
+
+        Memoized per partner: the optimizer's join enumerator probes the
+        same key pair once per candidate split, and an MCV sum is O(ndv).
+        The memo key embeds both row/NDV counts, so in-place stat extension
+        (delta appends) can never serve a stale overlap.
+        """
+        memo = self.__dict__.setdefault("_overlap_memo", {})
+        key = (id(other), self.n, self.ndv, other.n, other.ndv)
+        ent = memo.get(key)
+        if ent is not None and ent[0] is other:
+            return ent[1]
+        out = self._join_overlap(other)
+        if len(memo) > 8:
+            memo.clear()
+        memo[key] = (other, out)    # holding ``other`` pins its id
+        return out
+
+    def _join_overlap(self, other: "ColumnStats"
+                      ) -> Optional[tuple[float, str]]:
+        if self.n == 0 or other.n == 0:
+            return 0.0, "empty"
+        a_mcv, b_mcv = self.value_counts is not None, other.value_counts is not None
+        if a_mcv and b_mcv:
+            small, big = ((self.value_counts, other.value_counts)
+                          if len(self.value_counts) <= len(other.value_counts)
+                          else (other.value_counts, self.value_counts))
+            m = float(sum(c * big.get(v, 0) for v, c in small.items()))
+            return m, (f"mcv×mcv[{len(self.value_counts)}"
+                       f"×{len(other.value_counts)}]")
+        # numeric MCV point masses against the other side's histogram
+        if a_mcv and self.vmin is not None and other._has_hist():
+            return _points_vs_hist(self.value_counts, other), "mcv×hist"
+        if b_mcv and other.vmin is not None and self._has_hist():
+            return _points_vs_hist(other.value_counts, self), "hist×mcv"
+        if self._has_hist() and other._has_hist():
+            return (_hist_overlap(self, other),
+                    f"hist[{len(self.hist)}×{len(other.hist)}]")
+        return None
+
     def eq_fraction(self, value) -> float:
         """Fraction of rows equal to ``value`` (exact when MCV counts are
         kept, System-R 1/ndv otherwise)."""
@@ -302,6 +365,54 @@ def _rebin(counts: np.ndarray, old_edges: np.ndarray,
             if ov > 0:
                 out[j] += counts[i] * (ov / width)
     return out
+
+
+def _points_vs_hist(vc: dict, hstats: ColumnStats) -> float:
+    """Expected matches of exact point masses against a histogram side: each
+    key lands in one bucket and matches ``bucket_rows / bucket_ndv`` rows
+    (uniform key distribution within the bucket)."""
+    e, h = hstats.edges, hstats.hist
+    nd = hstats._bucket_ndvs()
+    m = 0.0
+    for v, c in vc.items():
+        try:
+            x = float(v)
+        except (TypeError, ValueError):
+            continue            # non-numeric key cannot hit a numeric bucket
+        if x < e[0] or x > e[-1]:
+            continue
+        j = min(max(int(np.searchsorted(e, x, "right")) - 1, 0), len(h) - 1)
+        m += c * h[j] / max(nd[j], 1.0)
+    return float(m)
+
+
+def _hist_overlap(a: ColumnStats, b: ColumnStats) -> float:
+    """Expected matches per overlapping equi-width bucket pair: within each
+    overlap region both sides are assumed uniform over their in-region
+    distincts, and the side with more distincts defines the key domain
+    (System-R containment, applied per region instead of globally)."""
+    nda, ndb = a._bucket_ndvs(), b._bucket_ndvs()
+    m = 0.0
+    for i in range(len(a.hist)):
+        lo_a, hi_a = float(a.edges[i]), float(a.edges[i + 1])
+        wa = hi_a - lo_a
+        if a.hist[i] <= 0 or wa <= 0:
+            continue
+        j = max(int(np.searchsorted(b.edges, lo_a, "right")) - 1, 0)
+        for j in range(j, len(b.hist)):
+            lo_b, hi_b = float(b.edges[j]), float(b.edges[j + 1])
+            if lo_b >= hi_a:
+                break
+            wb = hi_b - lo_b
+            ov = min(hi_a, hi_b) - max(lo_a, lo_b)
+            if b.hist[j] <= 0 or wb <= 0 or ov <= 0:
+                continue
+            ca = a.hist[i] * ov / wa          # rows of each side in region
+            cb = b.hist[j] * ov / wb
+            da = nda[i] * ov / wa             # distincts of each side there
+            db = ndb[j] * ov / wb
+            m += ca * cb / max(da, db, 1.0)
+    return float(m)
 
 
 def _numeric_stats(vals: np.ndarray, n_rows: int) -> ColumnStats:
@@ -725,14 +836,18 @@ class Graph:
     def avg_out_degree(self) -> float:
         return self.n_live_edges / max(self.n_vertices, 1)
 
-    def hop_expansion(self, reverse: bool = False) -> float:
+    def hop_expansion(self, reverse: bool = False,
+                      label: Optional[str] = None) -> float:
         """Label-aware per-hop fan-out: live edges per vertex of the label a
-        traversal expands *from* (src label forward, dst label reverse).
-        On bipartite graphs this differs from ``avg_out_degree`` by the label
-        size ratio, which is exactly the error the global average makes on
-        reverse traversals. Consistent with pending delta segments: both the
-        live-edge count and the merged vertex tables include the delta."""
-        label = self.dst_label if reverse else self.src_label
+        traversal expands *from* (src label forward, dst label reverse, or an
+        explicit ``label`` override for per-hop estimates on mixed-label
+        chains). On bipartite graphs this differs from ``avg_out_degree`` by
+        the label size ratio, which is exactly the error the global average
+        makes on reverse traversals. Consistent with pending delta segments:
+        both the live-edge count and the merged vertex tables include the
+        delta."""
+        if label is None:
+            label = self.dst_label if reverse else self.src_label
         return self.n_live_edges / max(self.vertex_tables[label].nrows, 1)
 
     # ---- base ⊕ delta topology reads ----

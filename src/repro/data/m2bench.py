@@ -108,6 +108,117 @@ def generate(sf: int = 1, seed: int = 0) -> Database:
 
 
 # ---------------------------------------------------------------------------
+# Skewed-key fixture: Zipfian join keys + the 4-source bushy exemplar
+# ---------------------------------------------------------------------------
+
+ZIPF_ALPHA = 0.9        # rank exponent of the Zipfian key draws
+N_HUBS = 16             # distinct values of the low-NDV "hub" join key
+
+
+def _zipf_weights(n: int, alpha: float = ZIPF_ALPHA) -> np.ndarray:
+    w = np.arange(1, n + 1, dtype=np.float64) ** -alpha
+    return w / w.sum()
+
+
+def generate_skew(sf: int = 1, seed: int = 7) -> Database:
+    """Zipfian-key workload (the MICRO/QUEST skew regime): the ``user_id``
+    join keys of Clicks and Purchases follow a Zipf law over the same head,
+    so the heavy keys match each other and the true join size is dominated
+    by Σ_k c_k·p_k — which uniform-key NDV containment collapses to
+    |L|·|R|/ndv, an order-of-magnitude underestimate. Histogram/MCV overlap
+    (``ColumnStats.join_overlap``) recovers it.
+
+    Also carries the 4-source bushy exemplar: two large fact tables
+    (``SrcA``, ``DstB``) connected by a low-NDV ``hub`` key, each reducible
+    by a small key list (``FiltA``, ``FiltD``) — the only cheap shape is
+    bushy ``(FiltA⋈SrcA) ⋈ (DstB⋈FiltD)``; every left-deep order pays a
+    huge hub-join intermediate on one side."""
+    rng = np.random.default_rng(seed)
+    db = Database()
+
+    # --- Zipfian 3-join tables ---------------------------------------------
+    n_users = 2_000 * sf
+    n_clicks = 12_000 * sf
+    n_purchases = 9_000 * sf
+    n_pages, n_products = 500, 400
+    w = _zipf_weights(n_users)
+    db.add_table(Table("Clicks", {
+        "click_id": np.arange(n_clicks, dtype=np.int64),
+        "user_id": rng.choice(n_users, size=n_clicks, p=w).astype(np.int64),
+        "page_id": rng.integers(0, n_pages, n_clicks).astype(np.int64),
+    }))
+    db.add_table(Table("Purchases", {
+        "purchase_id": np.arange(n_purchases, dtype=np.int64),
+        "user_id": rng.choice(n_users, size=n_purchases, p=w).astype(np.int64),
+        "product_id": rng.integers(0, n_products, n_purchases).astype(np.int64),
+    }))
+    db.add_table(Table("Pages", {
+        "id": np.arange(n_pages, dtype=np.int64),
+        "kind": DictColumn(values=[("ad", "organic", "search", "social",
+                                    "mail")[i % 5] for i in range(n_pages)]),
+    }))
+    db.add_table(Table("Products", {
+        "id": np.arange(n_products, dtype=np.int64),
+        "cat": DictColumn(values=[("gear", "food", "media", "home")[i % 4]
+                                  for i in range(n_products)]),
+    }))
+
+    # --- 4-source bushy exemplar -------------------------------------------
+    n_fact = 12_000 * sf
+    n_keys = 60
+    hubs = [f"h{i}" for i in range(N_HUBS)]
+    db.add_table(Table("SrcA", {
+        "id": np.arange(n_fact, dtype=np.int64),
+        "akey": rng.integers(0, n_fact, n_fact).astype(np.int64),
+        "hub": DictColumn(values=[hubs[i] for i in
+                                  rng.integers(0, N_HUBS, n_fact)]),
+    }))
+    db.add_table(Table("DstB", {
+        "id": np.arange(n_fact, dtype=np.int64),
+        "bkey": rng.integers(0, n_fact, n_fact).astype(np.int64),
+        "hub": DictColumn(values=[hubs[i] for i in
+                                  rng.integers(0, N_HUBS, n_fact)]),
+    }))
+    db.add_table(Table("FiltA", {
+        "akey": np.sort(rng.choice(n_fact, n_keys, replace=False)).astype(np.int64),
+    }))
+    db.add_table(Table("FiltD", {
+        "bkey": np.sort(rng.choice(n_fact, n_keys, replace=False)).astype(np.int64),
+    }))
+    return db
+
+
+def q_skew_3join() -> Query:
+    """Skewed 3-join exemplar: the Clicks⋈Purchases key join is Zipf × Zipf
+    (aligned heads), flanked by two uniform FK→PK joins with selective
+    filters — the root cardinality hinges on the key-distribution overlap,
+    exactly where NDV containment collapses."""
+    return Query(
+        select=("Clicks.click_id", "Purchases.purchase_id"),
+        froms=("Clicks", "Purchases", "Pages", "Products"),
+        joins=(JoinPred("Clicks.user_id", "Purchases.user_id"),
+               JoinPred("Clicks.page_id", "Pages.id"),
+               JoinPred("Purchases.product_id", "Products.id")),
+        where=(Predicate("Pages.kind", "==", "ad"),
+               Predicate("Products.cat", "==", "gear")),
+    )
+
+
+def q_bushy_4src() -> Query:
+    """4-source chain FiltA—SrcA—DstB—FiltD whose only cheap plan is bushy:
+    both fact tables must be reduced by their key lists *before* the
+    many-many hub join; any left-deep order crosses the hub edge with one
+    side unreduced and pays a ~1000x larger intermediate."""
+    return Query(
+        select=("SrcA.id", "DstB.id"),
+        froms=("FiltA", "SrcA", "DstB", "FiltD"),
+        joins=(JoinPred("FiltA.akey", "SrcA.akey"),
+               JoinPred("SrcA.hub", "DstB.hub"),
+               JoinPred("DstB.bkey", "FiltD.bkey")),
+    )
+
+
+# ---------------------------------------------------------------------------
 # Workload: GCDI queries G1-G8 and GCDA tasks A1-A3 (paper aliases)
 # ---------------------------------------------------------------------------
 

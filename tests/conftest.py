@@ -19,6 +19,10 @@ import types
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    config.addinivalue_line(
+        "markers",
+        "fast: quick core-engine tier (storage/planner/physical/optimizer/"
+        "cardinality) — run with `make test-fast` / `pytest -m fast`")
 
 
 def _install_hypothesis_stub():

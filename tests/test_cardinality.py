@@ -1,0 +1,373 @@
+"""Cardinality estimation: histogram/MCV join-key overlap
+(``ColumnStats.join_overlap``), the Selinger DP enumerator (bushy plans on
+the 4-source exemplar), per-hop label-aware graph fan-out, and the
+write-epoch keying of the cross-call estimate cache."""
+import numpy as np
+import pytest
+
+from repro.core import GredoEngine, optimizer, physical
+from repro.core.deltastore import DeltaConfig
+from repro.core.pattern import PatternPlan
+from repro.core.schema import chain_pattern
+from repro.core.storage import (ColumnStats, Database, DictColumn, Graph,
+                                Table, compute_stats)
+from repro.data import m2bench
+
+pytestmark = pytest.mark.fast
+
+
+@pytest.fixture(scope="module")
+def skew_db():
+    return m2bench.generate_skew(sf=1)
+
+
+def _qerr(est: float, actual: float) -> float:
+    return max(est / max(actual, 1e-9), actual / max(est, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# join_overlap: the per-key / per-bucket join model
+# ---------------------------------------------------------------------------
+
+
+def test_join_overlap_mcv_is_exact():
+    l = compute_stats(DictColumn(values=["a"] * 90 + ["b"] * 10))
+    r = compute_stats(DictColumn(values=["a"] * 5 + ["c"] * 2))
+    matches, how = l.join_overlap(r)
+    assert matches == 90 * 5
+    assert how.startswith("mcv×mcv")
+
+
+def test_join_overlap_numeric_mcv_vs_histogram():
+    rng = np.random.default_rng(0)
+    # > MCV_CAP distincts: the big side keeps only the histogram
+    big = compute_stats(rng.permutation(10_000).astype(np.float64))
+    assert big.value_counts is None and big.hist is not None
+    small = compute_stats(np.arange(10, dtype=np.float64))
+    matches, how = small.join_overlap(big)
+    # each of the 10 point keys should match ~1 of the 10k distinct rows
+    assert 2.0 <= matches <= 50.0
+    assert "hist" in how and "mcv" in how
+
+
+def test_join_overlap_histogram_pair():
+    rng = np.random.default_rng(1)
+    a = compute_stats(rng.integers(0, 10_000, 10_000).astype(np.float64))
+    b = compute_stats(rng.integers(0, 10_000, 10_000).astype(np.float64))
+    assert a.value_counts is None and b.value_counts is None
+    matches, how = a.join_overlap(b)
+    # uniform keys: ~n*n/domain = 10_000 expected matches
+    assert 5_000 <= matches <= 20_000
+    assert how.startswith("hist[")
+
+
+def test_join_overlap_none_without_distribution_falls_back_to_ndv():
+    bare_l, bare_r = ColumnStats(n=100, ndv=10), ColumnStats(n=50, ndv=5)
+    assert bare_l.join_overlap(bare_r) is None
+    rows, how = physical.est_join_rows_detail(100, 50, bare_l, bare_r)
+    assert how == "ndv" and rows == pytest.approx(100 * 50 / 10)
+
+
+def test_join_overlap_matches_true_zipf_join_size(skew_db):
+    """On aligned Zipf keys the MCV overlap equals the exact join size,
+    while NDV containment is off by an order of magnitude."""
+    c = skew_db.tables["Clicks"].stats("user_id")
+    p = skew_db.tables["Purchases"].stats("user_id")
+    cu = np.bincount(np.asarray(skew_db.tables["Clicks"].col("user_id")))
+    pu = np.bincount(np.asarray(skew_db.tables["Purchases"].col("user_id")),
+                     minlength=len(cu))
+    true = float(cu @ pu[:len(cu)])
+    matches, how = c.join_overlap(p)
+    assert how.startswith("mcv×mcv")
+    assert matches == pytest.approx(true)
+    ndv_est = c.n * p.n / max(c.ndv, p.ndv)
+    assert true / ndv_est > 5.0          # the regime NDV collapses in
+
+
+def test_filtered_inputs_scale_the_overlap():
+    """est_join_rows threads input selectivities into the bucket counts:
+    half the rows on one side -> half the matches."""
+    l = compute_stats(DictColumn(values=["a"] * 80 + ["b"] * 20))
+    r = compute_stats(DictColumn(values=["a"] * 10))
+    full = physical.est_join_rows(100, 10, l, r)
+    half = physical.est_join_rows(50, 10, l, r)
+    assert full == pytest.approx(800)
+    assert half == pytest.approx(400)
+
+
+def test_overlap_maintained_across_delta_appends():
+    """The merged base ⊕ delta stats views keep exact MCV counts, so
+    join_overlap stays current without an O(base) recompute."""
+    vt = Table("A", {"v": np.arange(10, dtype=np.float64)})
+    edges = Table("E", {"svid": np.zeros(1, dtype=np.int64),
+                        "tvid": np.zeros(1, dtype=np.int64)})
+    g = Graph("G", {"A": vt}, edges, "A", "A",
+              delta_config=DeltaConfig(auto_compact=False))
+    probe = compute_stats(np.array([3.0, 3.0]))
+    before, _ = g.vertex_tables["A"].stats("v").join_overlap(probe)
+    g.insert_vertices("A", {"v": np.array([3.0, 3.0, 3.0])})
+    after, how = g.vertex_tables["A"].stats("v").join_overlap(probe)
+    assert before == pytest.approx(2.0)      # 1 base row x 2 probe rows
+    assert after == pytest.approx(8.0)       # 4 rows x 2 probe rows
+    assert how.startswith("mcv×mcv")
+
+
+# ---------------------------------------------------------------------------
+# q-error regression on the Zipfian workload
+# ---------------------------------------------------------------------------
+
+
+def test_skew_query_qerror_hist_beats_ndv(skew_db):
+    """Root-level q-error of the skewed 3-join query: histogram-overlap
+    estimates land within 4x of the truth and beat the NDV-only baseline by
+    at least 2x (observed: ~1.0 vs ~22)."""
+    q = m2bench.q_skew_3join()
+    eng = GredoEngine(skew_db)
+    r = eng.query(q)
+    q_hist = _qerr(eng.last_ests[id(eng.last_dag)][0], r.nrows)
+
+    physical.HIST_JOIN_EST = False
+    try:
+        eng_ndv = GredoEngine(skew_db)
+        r2 = eng_ndv.query(q)
+        q_ndv = _qerr(eng_ndv.last_ests[id(eng_ndv.last_dag)][0], r2.nrows)
+    finally:
+        physical.HIST_JOIN_EST = True
+
+    assert r.nrows == r2.nrows
+    assert q_hist <= 4.0
+    assert q_ndv >= 2.0 * q_hist
+
+
+def test_skew_query_provenance_rendered(skew_db):
+    """explain() names the estimate source per join (per-bucket provenance)."""
+    eng = GredoEngine(skew_db)
+    dag = eng.optimized_plan(m2bench.q_skew_3join())
+    rendered = physical.explain(dag, db=skew_db)
+    assert "est_via=mcv×mcv" in rendered
+
+
+# ---------------------------------------------------------------------------
+# Bushy plans: the 4-source exemplar where every left-deep order is worse
+# ---------------------------------------------------------------------------
+
+BUSHY_GOLDEN = """\
+Project[SrcA.id, DstB.id]
+  EquiJoin[DstB.hub=SrcA.hub]
+    EquiJoin[DstB.bkey=FiltD.bkey]
+      Alias[DstB]
+        ScanTable[DstB]
+      Alias[FiltD]
+        ScanTable[FiltD]
+    EquiJoin[SrcA.akey=FiltA.akey]
+      Alias[SrcA]
+        ScanTable[SrcA]
+      Alias[FiltA]
+        ScanTable[FiltA]"""
+
+
+def _is_bushy(root) -> bool:
+    def has_join(n):
+        return isinstance(n, (physical.EquiJoin, physical.IntraFilter)) \
+            or any(has_join(c) for c in n.children)
+
+    def walk(n):
+        if isinstance(n, physical.EquiJoin) and all(map(has_join, n.children)):
+            return True
+        return any(walk(c) for c in n.children)
+
+    return walk(root)
+
+
+def test_bushy_plan_selected_on_4_source_query(skew_db):
+    eng = GredoEngine(skew_db)
+    q = m2bench.q_bushy_4src()
+    dag = eng.optimized_plan(q)
+    assert physical.explain(dag) == BUSHY_GOLDEN
+    assert _is_bushy(dag)
+    assert any(n.startswith("join-order: dp bushy")
+               for n in eng.last_report.notes())
+
+
+def test_every_left_deep_order_is_worse(skew_db):
+    """dp-leftdeep finds the *best* left-deep plan; the bushy plan still
+    beats it on estimated cost and on the actual intermediate sizes, and
+    returns the same rows."""
+    q = m2bench.q_bushy_4src()
+    cache: dict = {}
+    bushy_eng = GredoEngine(skew_db)
+    ld_eng = GredoEngine(skew_db, join_enum="dp-leftdeep")
+    bushy_dag = bushy_eng.optimized_plan(q)
+    ld_dag = ld_eng.optimized_plan(q)
+    assert not _is_bushy(ld_dag)
+    assert optimizer._est_cost(bushy_dag, skew_db, cache) \
+        < optimizer._est_cost(ld_dag, skew_db, cache)
+
+    r_bushy = bushy_eng.query(q)
+    r_ld = ld_eng.query(q)
+    assert r_bushy.nrows == r_ld.nrows
+
+    def max_join_rows(eng):
+        return max((o["rows"] or 0) for o in eng.last_stats.operators
+                   if o["op"] == "EquiJoin")
+
+    assert max_join_rows(ld_eng) > 10 * max_join_rows(bushy_eng)
+
+
+def test_greedy_fallback_still_used_above_dp_cap(skew_db):
+    """join_enum='greedy' (and, transitively, join graphs past the DP cap)
+    goes through the smallest-intermediate-first path and stays correct."""
+    q = m2bench.q_bushy_4src()
+    greedy = GredoEngine(skew_db, join_enum="greedy")
+    dp = GredoEngine(skew_db)
+    assert greedy.query(q).nrows == dp.query(q).nrows
+
+
+# ---------------------------------------------------------------------------
+# Per-hop, label-aware fan-out (TableJoinMatch / MatchPattern estimates)
+# ---------------------------------------------------------------------------
+
+
+def _bipartite_graph(n_a=10, n_b=1000, n_e=2000, seed=0):
+    rng = np.random.default_rng(seed)
+    va = Table("A", {"x": np.arange(n_a, dtype=np.int64)})
+    vb = Table("B", {"y": np.arange(n_b, dtype=np.int64)})
+    edges = Table("E", {"svid": rng.integers(0, n_a, n_e).astype(np.int64),
+                        "tvid": rng.integers(0, n_b, n_e).astype(np.int64)})
+    return Graph("G", {"A": va, "B": vb}, edges, "A", "B")
+
+
+def test_hop_expansion_label_override():
+    g = _bipartite_graph()
+    assert g.hop_expansion() == pytest.approx(200.0)             # from A
+    assert g.hop_expansion(reverse=True) == pytest.approx(2.0)   # from B
+    assert g.hop_expansion(label="B") == pytest.approx(2.0)
+    assert g.hop_expansion(reverse=True, label="A") == pytest.approx(200.0)
+
+
+def test_table_join_match_estimate_is_per_hop_label_aware():
+    """A 2-hop chain whose interior vertex is the *big* label: the k-way
+    join estimate must use that hop's fan-out (E/|B| = 2), not the global
+    forward fan-out (E/|A| = 200)."""
+    g = _bipartite_graph()
+    db = Database()
+    db.add_graph(g)
+    pat = chain_pattern("G", ("a", "A", "E", "b", "B"),
+                        ("b", "B", "E", "c", "B"))
+    node = physical.TableJoinMatch("G", 0, pat, {})
+    est = physical.estimate(node, db)[id(node)][0]
+    assert est == pytest.approx(2000 * 2.0)      # not 2000 * 200
+
+
+def test_match_pattern_estimate_is_per_hop_label_aware():
+    """Same chain through the hybrid matcher: hop 1 expands from A (200x),
+    hop 2 from B (2x) — the old single-scalar model compounded 200^2."""
+    g = _bipartite_graph()
+    db = Database()
+    db.add_graph(g)
+    pat = chain_pattern("G", ("a", "A", "E", "b", "B"),
+                        ("b", "B", "E", "c", "B"))
+    pplan = PatternPlan(pat, reverse=False, pushed={}, deferred={},
+                        fetch_vars=set())
+    node = physical.MatchPattern("G", 0, pplan, ())
+    est = physical.estimate(node, db)[id(node)][0]
+    assert est == pytest.approx(10 * 200.0 * 2.0)
+
+
+def test_single_hop_reverse_estimate_unchanged():
+    """The per-hop rewrite reduces to the old label-aware scalar on the
+    shapes the workload actually runs (1-hop reverse on bipartite)."""
+    g = _bipartite_graph()
+    db = Database()
+    db.add_graph(g)
+    pat = chain_pattern("G", ("a", "A", "E", "b", "B"))
+    pplan = PatternPlan(pat, reverse=True, pushed={}, deferred={},
+                        fetch_vars=set())
+    node = physical.MatchPattern("G", 0, pplan, ())
+    est = physical.estimate(node, db)[id(node)][0]
+    assert est == pytest.approx(1000 * g.hop_expansion(reverse=True))
+
+
+# ---------------------------------------------------------------------------
+# Cross-call estimate cache: keyed on source write epochs
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_cache_invalidated_by_delta_appends():
+    """A persistent optimizer cache must not serve cardinalities computed
+    before a delta-store append: re-planning after insert_edges sees the
+    new live-edge count."""
+    db = m2bench.generate(sf=1)
+    eng = GredoEngine(db)
+    q = m2bench.q_g1()
+
+    eng.optimized_plan(q)
+    snap1 = eng._opt_cache["__catalog__"]
+    mp1 = _find_op(eng.last_dag, physical.MatchPattern)
+    rows1 = optimizer._est_rows(mp1, db, eng._opt_cache)
+
+    g = db.graphs["Interested_in"]
+    g.insert_edges({"svid": np.arange(400, dtype=np.int64),
+                    "tvid": np.arange(400, dtype=np.int64) % 40,  # food tags
+                    "weight": np.linspace(0, 1, 400)})
+
+    eng.optimized_plan(q)
+    snap2 = eng._opt_cache["__catalog__"]
+    mp2 = _find_op(eng.last_dag, physical.MatchPattern)
+    rows2 = optimizer._est_rows(mp2, db, eng._opt_cache)
+
+    assert snap1 != snap2                      # epoch snapshot advanced
+    assert rows2 > rows1                       # estimates see the new edges
+
+
+def test_estimate_cache_invalidated_by_join_model_toggle():
+    """Flipping HIST_JOIN_EST (the NDV-baseline switch) must also drop
+    cached estimates — signatures embed epochs, not the model toggle."""
+    db = m2bench.generate_skew(sf=1)
+    eng = GredoEngine(db)
+    q = m2bench.q_skew_3join()
+    eng.optimized_plan(q)
+    hist_root = eng.last_ests[id(eng.last_dag)][0]
+    physical.HIST_JOIN_EST = False
+    try:
+        eng.optimized_plan(q)                  # same engine, same cache
+        cache = dict(eng._opt_cache)
+        root = eng.last_dag
+        ndv_root = physical.estimate(root, db,
+                                     _cache=eng._opt_cache)[id(root)][0]
+    finally:
+        physical.HIST_JOIN_EST = True
+    assert ndv_root < hist_root / 2            # no hist estimates replayed
+    assert cache["__catalog__"][1] is False
+
+
+def test_shared_cache_cleared_when_catalog_moves():
+    """optimizer.optimize with an explicitly shared cache reuses it while
+    the catalog is unchanged and drops every entry on an epoch change
+    (stale node estimates cannot survive a delta-store append)."""
+    db = m2bench.generate(sf=1)
+    eng = GredoEngine(db)
+    cache: dict = {}
+    optimizer.optimize(eng.physical_plan(m2bench.q_g1()), db, cache=cache)
+    cache["__sentinel__"] = True
+    # same catalog: the cache (sentinel included) survives the next call
+    optimizer.optimize(eng.physical_plan(m2bench.q_g1()), db, cache=cache)
+    assert cache.get("__sentinel__") is True
+    db.graphs["Interested_in"].insert_edges(
+        {"svid": np.array([0]), "tvid": np.array([0]),
+         "weight": np.array([0.5])})
+    optimizer.optimize(eng.physical_plan(m2bench.q_g1()), db, cache=cache)
+    assert "__sentinel__" not in cache         # epoch moved: cache cleared
+    epochs, hist_flag = cache["__catalog__"]
+    assert dict(epochs)["Interested_in"] == db.epoch_of("Interested_in")
+    assert hist_flag is physical.HIST_JOIN_EST
+
+
+def _find_op(root, cls):
+    if isinstance(root, cls):
+        return root
+    for c in root.children:
+        hit = _find_op(c, cls)
+        if hit is not None:
+            return hit
+    return None

@@ -17,6 +17,8 @@ from repro.core.storage import (Database, DictColumn, Graph, RaggedColumn,
                                 Table, build_csr)
 from repro.core import traversal
 
+pytestmark = pytest.mark.fast
+
 
 # ---------------------------------------------------------------------------
 # Helpers: build a graph, mutate it, and rebuild an oracle from scratch

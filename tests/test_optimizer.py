@@ -12,6 +12,8 @@ from repro.core.schema import (AnalyticsTask, GCDIATask, JoinPred, Predicate,
 from repro.core.storage import Database, DictColumn, Graph, Table, compute_stats
 from repro.data import m2bench
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.fixture(scope="module")
 def db():
@@ -55,10 +57,12 @@ Project[Customer.id, t.tid]
   EquiJoin[p.pid=Customer.person_id]
     GraphProject[Interested_in keep=p,t]
       MatchPattern[Interested_in dir=rev hops=1 pushed=t:1 deferred=-]
+        SemiJoinMask[Persons.pid ∈ person_id]
+          PruneCols[id, person_id]
+            ScanTable[Customer]
     EquiJoin[Customer.id=Orders.customer_id]
       Alias[Customer]
-        PruneCols[id, person_id]
-          ScanTable[Customer]
+        ^shared:PruneCols[id, person_id]
       EquiJoin[Orders.product_id=Product.id]
         Alias[Orders]
           PruneCols[customer_id, product_id]
@@ -71,8 +75,10 @@ Project[Customer.id, t.tid]
 
 def test_skewed_three_join_is_reordered(db):
     """The naive DAG follows the (deliberately bad) query order — graph ⋈
-    Customer ⋈ Orders first, the selective Product filter last. The
-    optimizer flips it to smallest-intermediate-first."""
+    Customer ⋈ Orders first, the selective Product filter last. The DP
+    enumerator flips it to selective-first and (because siding is searched
+    jointly with the order) adds the graph-side candidate mask, sharing the
+    pruned Customer subtree with the join cluster."""
     eng = GredoEngine(db)
     q = m2bench.q_opt_skew()
     assert physical.explain(eng.physical_plan(q)) == SKEW_NAIVE

@@ -9,6 +9,10 @@ from repro.core.pattern import PatternPlan, match, plan_pattern
 from repro.core.schema import Predicate, chain_pattern
 from repro.core.storage import Graph, Table
 
+import pytest
+
+pytestmark = pytest.mark.fast
+
 
 # ---------------------------------------------------------------------------
 # Literal paper structures: linked-list adjacency graph (Definition 4)

@@ -9,6 +9,8 @@ from repro.core.schema import AnalyticsTask, GCDIATask
 from repro.core.storage import Graph, Table
 from repro.data import m2bench
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.fixture(scope="module")
 def db():

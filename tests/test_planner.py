@@ -9,6 +9,10 @@ from repro.core.schema import JoinPred, Pattern, PatternVertex, Predicate, Query
 from repro.core.storage import Database, Graph, Table
 from repro.data import m2bench
 
+import pytest
+
+pytestmark = pytest.mark.fast
+
 
 def _rows(t: Table):
     cols = sorted(t.columns)

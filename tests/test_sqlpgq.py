@@ -8,6 +8,8 @@ from repro.core.schema import JoinPred, Predicate
 from repro.core.sqlpgq import parse
 from repro.data import m2bench
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.fixture(scope="module")
 def db():

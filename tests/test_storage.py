@@ -1,11 +1,14 @@
 """Storage invariants: doc shredding, ragged/dict columns, CSR topology
 (hypothesis property: CSR neighbor expansion == edge-list definition)."""
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.storage import (CSR, Database, DictColumn, Graph,
                                 RaggedColumn, Table, build_csr,
                                 shred_documents)
+
+pytestmark = pytest.mark.fast
 
 
 @given(st.integers(2, 30), st.integers(0, 60), st.integers(0, 2 ** 31 - 1))

@@ -6,6 +6,8 @@ import pytest
 from repro.core import GredoEngine, analytics
 from repro.data import m2bench
 
+pytestmark = pytest.mark.fast
+
 
 @pytest.fixture(scope="module")
 def db():
