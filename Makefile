@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer
+.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index
 
 # tier-1 verification (the full suite — unchanged)
 test:
@@ -17,11 +17,12 @@ test-fast:
 	python -m pytest -x -q -m fast
 
 # small-size benchmark pass (CI smoke): paper suite fast mode + update +
-# optimizer suites
+# optimizer + index suites
 bench-smoke:
 	python -m benchmarks.run --fast --sf 1
 	python -m benchmarks.run --suite update --fast
 	python -m benchmarks.run --suite optimizer --fast
+	python -m benchmarks.run --suite index --fast --sf 2
 
 bench:
 	python -m benchmarks.run --sf 1
@@ -36,3 +37,9 @@ bench-gcdia:
 # cost-based optimizer: naive query-order DAG vs rewritten DAG latency
 bench-optimizer:
 	python -m benchmarks.run --suite optimizer --sf 2
+
+# secondary-index access paths: indexed vs full-scan latency + selectivity
+# sweep + write-path maintenance overhead (--sf 80: the point lookup's full
+# scans dominate the fixed executor overhead there)
+bench-index:
+	python -m benchmarks.run --suite index --sf 80

@@ -51,6 +51,18 @@ def _optimizer_suite(sf: int, fast: bool) -> list[dict]:
     return rows
 
 
+def _index_suite(sf: int, fast: bool) -> list[dict]:
+    """Secondary-index access paths: indexed vs. full-scan latency on the
+    selective fixtures, the selectivity-sweep crossover, and the write-path
+    maintenance overhead. The access-path win grows with --sf (the
+    Makefile's bench-index target uses --sf 80, where the point lookup's
+    full scans dominate the fixed executor overhead)."""
+    from . import index_bench
+    rows = index_bench.run_suite(sf=sf, fast=fast)
+    index_bench.print_rows(rows)
+    return rows
+
+
 def _save(all_rows: list[dict]) -> None:
     """Merge into experiments/bench_results.json: rows of the tables just
     measured replace their previous records; other suites' rows persist."""
@@ -76,13 +88,15 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip the scale-factor sweep / use smoke sizes")
     ap.add_argument("--suite",
-                    choices=("paper", "update", "gcdia", "optimizer", "all"),
+                    choices=("paper", "update", "gcdia", "optimizer",
+                             "index", "all"),
                     default="paper",
                     help="paper: GCDI/GCDA tables; update: write-path "
                          "throughput (delta store vs full rebuild); gcdia: "
                          "operator-level inter-buffer reuse (per-operator "
                          "timings + hit rates); optimizer: naive-order vs "
-                         "cost-based rewritten DAG latency")
+                         "cost-based rewritten DAG latency; index: "
+                         "secondary-index access paths vs full scans")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -94,6 +108,12 @@ def main() -> None:
     if args.suite in ("optimizer", "all"):
         all_rows += _optimizer_suite(sf=args.sf, fast=args.fast)
         if args.suite == "optimizer":
+            _save(all_rows)
+            return
+
+    if args.suite in ("index", "all"):
+        all_rows += _index_suite(sf=args.sf, fast=args.fast)
+        if args.suite == "index":
             _save(all_rows)
             return
 

@@ -82,6 +82,25 @@ def cost_filter(n: float, n_preds: int = 1) -> float:
     return float(n) * max(n_preds, 1) * COST_CPU
 
 
+def cost_index_lookup(n: float, hits: float) -> float:
+    """Posting-list access path: binary probes into the sorted postings
+    (log n) plus one tid-based record fetch per matching row — the price
+    that undercuts ``cost_scan`` exactly when the predicate is selective."""
+    return (np.log2(max(n, 2.0)) * COST_CPU
+            + max(hits, 0.0) * (COST_IO + COST_CPU))
+
+
+ZONE_CHUNK = 2048   # rows per zone-map chunk (repro.core.index imports this)
+
+
+def cost_zone_scan(n: float, frac: float, n_chunks: float = 0.0) -> float:
+    """Zone-map skip-scan: one min/max probe per chunk, then a sequential
+    scan of the candidate fraction only. Callers holding the live ZoneMap
+    pass its actual ``n_chunks``; the default derives from ZONE_CHUNK."""
+    nch = n_chunks if n_chunks else max(float(n) / ZONE_CHUNK, 1.0)
+    return nch * COST_CPU + max(frac, 0.0) * float(n) * (COST_IO + COST_CPU)
+
+
 def cost_semijoin(n_left: int, n_right: int) -> float:
     """Semi-join reduction (Eq. 9/10 mask build): sort the smaller key set,
     binary-probe the larger — no output expansion."""

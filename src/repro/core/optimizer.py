@@ -207,6 +207,9 @@ def _optimize_gcdi(proj: ph.PhysicalOp, db: Database, report: OptReport,
     # -- pass 2: column pruning (projection sink-down into the scans) ------
     leaves = _prune_columns(leaves, db, q, residual, report)
 
+    # -- pass 2b: cost-based access-path selection per table scan ----------
+    leaves = _select_access_paths(leaves, db, report)
+
     # -- pass 3+4: join enumeration with semi-join siding inside ----------
     cands = []
     if pattern is not None and p.semi_join_idx:
@@ -252,6 +255,7 @@ def _optimize_gcdi(proj: ph.PhysicalOp, db: Database, report: OptReport,
         report.add("join-order", f"{join_enum} {shape}{list(order)} "
                                  f"(query order {sorted(order)})")
 
+    _annotate_match_access(current, db)
     if residual:
         current = ph.Residual(residual, current)
     return proj.with_children(current)
@@ -296,6 +300,106 @@ def _sink_selections(leaves: list, residual: list, report: OptReport
             report.add("sink-down", f"{pred!r} -> {leaf.kind} cluster")
         leaves[target] = new_leaf
     return leaves, kept
+
+
+# ---------------------------------------------------------------------------
+# Access-path selection (index / zone skip-scan / full scan), per table leaf
+# ---------------------------------------------------------------------------
+
+
+def _select_access_paths(leaves: list, db: Database,
+                         report: OptReport) -> list:
+    """Cost-compare the three access paths of every ``Select``-over-
+    ``ScanTable`` leaf — posting-list :class:`~repro.core.physical.IndexScan`,
+    zone-map :class:`~repro.core.physical.IndexSelect` skip-scan, and the
+    full scan — using the existing ``ColumnStats`` selectivities and the
+    live zone-map candidate fractions. The cheapest replaces the pair; the
+    decision is recorded as ``access=`` provenance either way (rendered by
+    ``explain``/``explain_last``)."""
+    im = getattr(db, "_index_manager", None)
+    leaves = list(leaves)
+    for li, leaf in enumerate(leaves):
+        alias = _table_leaf(leaf)
+        if alias is None or alias.name not in db.tables:
+            continue
+        top = alias.children[0]
+        prune = top if isinstance(top, ph.PruneCols) else None
+        node = prune.children[0] if prune is not None else top
+        if isinstance(node, ph.ScanTable):
+            node.access = "full-scan"
+            continue
+        if not (isinstance(node, ph.Select)
+                and isinstance(node.children[0], ph.ScanTable)):
+            continue
+        sel_node, scan = node, node.children[0]
+        tbl = db.tables[alias.name]
+        n = float(tbl.nrows)
+        preds = sel_node.preds
+        sels = [tbl.stats(p.column).selectivity(p) for p in preds]
+        cost_full = cost_mod.cost_scan(n) + cost_mod.cost_filter(n, len(preds))
+        best = ("full-scan", cost_full, None)
+        for i, p in enumerate(preds):
+            if im is None:
+                break
+            idx = im.get(alias.name, p.column)
+            if idx is None:
+                continue
+            hits = n * sels[i]
+            # residual predicates point-evaluate on the picked pred's hits
+            rest = (cost_mod.cost_filter(hits, len(preds) - 1)
+                    if len(preds) > 1 else 0.0)
+            if idx.serves(p.op):
+                c = cost_mod.cost_index_lookup(n, hits) + rest
+                if c < best[1]:
+                    best = (idx.kind, c, i)
+            frac = idx.zone_fraction(p)
+            if frac is not None:
+                c = cost_mod.cost_zone_scan(
+                    n, frac, idx.zones.n_chunks if idx.zones else 0.0) + rest
+                if c < best[1]:
+                    best = ("zone", c, i)
+        access, c, i = best
+        if i is None:
+            sel_node.access = "full-scan"
+            scan.access = "full-scan"
+            continue
+        if access == "zone":
+            new_node = ph.IndexSelect(alias.name, scan.epoch, preds, i)
+        else:
+            new_node = ph.IndexScan(alias.name, scan.epoch, preds, i, access)
+        rebuilt = (prune.with_children(new_node) if prune is not None
+                   else new_node)
+        leaves[li] = alias.with_children(rebuilt)
+        report.add("access-path",
+                   f"{alias.name}: {access} on {preds[i]!r} "
+                   f"(cost {c:.3g} < full scan {cost_full:.3g})")
+    return leaves
+
+
+def _annotate_match_access(root: ph.PhysicalOp, db: Database) -> None:
+    """Record (as ``access=`` provenance) whether the pattern's pushed
+    predicates will seed candidate sets from the graph's composite
+    (label, attr) indexes at match time — mirroring the runtime check in
+    ``pattern._candidate_set`` (including its MIN_INDEX_ROWS floor)."""
+    mp = _find_kind(root, ph.MatchPattern)
+    if mp is None or mp.pplan is None:
+        return
+    from . import pattern as pattern_mod
+    im = getattr(db, "_index_manager", None)
+    served = []
+    if im is not None:
+        g = db.graphs[mp.graph]
+        pat = mp.pplan.pattern
+        edge_vars = {e.var for e in pat.edges}
+        for var, ps in sorted(mp.pplan.pushed.items()):
+            label = None if var in edge_vars else pat.vertex(var).label
+            tbl = g.edges if label is None else g.vertex_tables[label]
+            if tbl.nrows < pattern_mod.MIN_INDEX_ROWS:
+                continue    # runtime falls back to the vectorized scan
+            if any((idx := im.get(mp.graph, pr.column, label=label)) is not None
+                   and idx.serves(pr.op) for pr in ps):
+                served.append(var)
+    mp.access = f"index-seed[{','.join(served)}]" if served else "mask-scan"
 
 
 def _needed_columns(q, coll: str, residual: list) -> set:

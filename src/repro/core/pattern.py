@@ -137,25 +137,81 @@ def plan_pattern(g: Graph, pattern: Pattern, phi: dict[str, list[Predicate]],
 # Execution
 # ---------------------------------------------------------------------------
 
+# Below this row count a vectorized column scan beats the posting-list
+# machinery (binary probes + gathers carry fixed per-call overhead), so
+# candidate sets fall back to the scan path on tiny labels.
+MIN_INDEX_ROWS = 1024
 
-def _candidate_mask(g: Graph, pattern: Pattern, var: str,
-                    preds: list[Predicate],
-                    extra: Optional[np.ndarray] = None) -> Optional[np.ndarray]:
-    """M(v_p) after pushdown: boolean mask over the label's vid space
-    (Lines 3-7 of Algorithm 2 with the §5.2 pushdown modification).
-    ``extra`` is a pre-computed candidate mask over the same vid space —
-    the semi-join output of join pushdown (Eq. 9/10), intersected in."""
+
+def _candidate_set(g: Graph, pattern: Pattern, var: str,
+                   preds: list[Predicate],
+                   extra: Optional[np.ndarray] = None
+                   ) -> Optional[tuple[str, np.ndarray]]:
+    """M(v_p) after pushdown, as a tagged candidate set over the label's
+    vid (or edge-tid) space: ``("rows", row_ids)`` when an index served the
+    predicates (postings, no O(n) scan), ``("mask", bool_mask)`` from the
+    scan path, or the ``None`` sentinel when the var carries no constraint
+    at all — callers skip the all-true mask and its downstream
+    intersections entirely (Lines 3-7 of Algorithm 2 with the §5.2
+    pushdown modification). ``extra`` is a pre-computed candidate mask over
+    the same space — the semi-join output of join pushdown (Eq. 9/10),
+    intersected in.
+
+    When the graph carries a composite (label, attr) index serving a
+    pushed predicate (:mod:`repro.core.index`), the candidate set is
+    seeded from the index postings and the remaining predicates are
+    point-evaluated on those rows only — no O(n) column scan."""
     if not preds and extra is None:
         return None
     is_edge = any(e.var == var for e in pattern.edges)
     tbl = g.edges if is_edge else g.vertex_tables[pattern.vertex(var).label]
-    mask = np.ones(tbl.nrows, dtype=bool)
-    for p in preds:
-        mask &= tbl.eval_predicate(p)
-        traversal.COUNTERS.record_fetches += tbl.nrows  # pushdown scans the column
-        traversal.COUNTERS.cpu_ops += tbl.nrows
-    if extra is not None:
-        mask = mask & extra
+    if preds:
+        im = getattr(g, "_index_manager", None)
+        rows = None
+        rest = list(preds)
+        if im is not None and tbl.nrows >= MIN_INDEX_ROWS:
+            rest = []
+            label = None if is_edge else pattern.vertex(var).label
+            for p in preds:
+                hit = im.lookup(g.name, p, label=label)
+                if hit is None:
+                    rest.append(p)
+                    continue
+                rows = hit if rows is None \
+                    else np.intersect1d(rows, hit, assume_unique=True)
+                traversal.COUNTERS.cpu_ops += len(hit)
+        if rows is not None:
+            # index-seeded: residual predicates touch the candidates only
+            for p in rest:
+                if len(rows):
+                    rows = rows[tbl.eval_predicate(p, rows=rows)]
+                traversal.COUNTERS.record_fetches += len(rows)
+                traversal.COUNTERS.cpu_ops += len(rows)
+            if extra is not None:
+                rows = rows[extra[rows]]
+            return ("rows", rows)
+        mask: Optional[np.ndarray] = None
+        for p in preds:
+            m = tbl.eval_predicate(p)
+            mask = m if mask is None else (mask & m)
+            traversal.COUNTERS.record_fetches += tbl.nrows  # column scan
+            traversal.COUNTERS.cpu_ops += tbl.nrows
+        if extra is not None:
+            mask = mask & extra
+        return ("mask", mask)
+    return ("mask", extra)
+
+
+def _as_mask(cand: Optional[tuple[str, np.ndarray]],
+             n: int) -> Optional[np.ndarray]:
+    """Materialize a tagged candidate set as a boolean mask of length n."""
+    if cand is None:
+        return None
+    kind, data = cand
+    if kind == "mask":
+        return data
+    mask = np.zeros(n, dtype=bool)
+    mask[data] = True
     return mask
 
 
@@ -176,29 +232,44 @@ def match(g: Graph, plan: PatternPlan,
         hop_vars = hop_vars[::-1]
         hop_edges = hop_edges[::-1]
 
-    # vertex candidate member tables over nid space (scatter through
-    # label_nids: with pending delta vertices a label's nid set is its base
-    # block plus appended delta nids, in merged-table row order)
+    # vertex candidate sets over the vid space; nid-space member masks are
+    # materialized lazily (scatter through label_nids: with pending delta
+    # vertices a label's nid set is its base block plus appended delta
+    # nids, in merged-table row order) — and only for vars that actually
+    # filter a hop. Index-seeded ("rows") start vars never pay the scatter.
+    cand = {v: _candidate_set(g, pattern, v, plan.pushed.get(v, []),
+                              extra_masks.get(v)) for v in chain_vars}
     member: dict[str, Optional[np.ndarray]] = {}
-    for v in chain_vars:
-        m = _candidate_mask(g, pattern, v, plan.pushed.get(v, []),
-                            extra_masks.get(v))
-        if m is not None:
-            full = np.zeros(g.n_vertices, dtype=bool)
-            full[g.label_nids(pattern.vertex(v).label)] = m
-            member[v] = full
-        else:
-            member[v] = None
+
+    def member_of(v: str) -> Optional[np.ndarray]:
+        if v not in member:
+            c = cand[v]
+            if c is None:
+                member[v] = None
+            else:
+                full = np.zeros(g.n_vertices, dtype=bool)
+                if c[0] == "mask":
+                    full[g.label_nids(pattern.vertex(v).label)] = c[1]
+                else:   # vid rows -> nids (delta rows included)
+                    full[g.nid_of(pattern.vertex(v).label, c[1])] = True
+                member[v] = full
+        return member[v]
+
     edge_mask: dict[str, Optional[np.ndarray]] = {
-        e: _candidate_mask(g, pattern, e, plan.pushed.get(e, [])) for e in edge_vars}
+        e: _as_mask(_candidate_set(g, pattern, e, plan.pushed.get(e, [])),
+                    g.edges.nrows) for e in edge_vars}
 
     # initial frontier (Line 9): candidates of the first hop var
     v0 = hop_vars[0]
-    v0_nids = g.label_nids(pattern.vertex(v0).label)
-    if member[v0] is not None:
-        start_nids = v0_nids[member[v0][v0_nids]]
+    c0 = cand[v0]
+    if c0 is None:
+        start_nids = g.label_nids(pattern.vertex(v0).label)
+    elif c0[0] == "rows":
+        # frontier seeded straight from index postings — no full-label mask
+        start_nids = np.atleast_1d(g.nid_of(pattern.vertex(v0).label, c0[1]))
     else:
-        start_nids = v0_nids
+        v0_nids = g.label_nids(pattern.vertex(v0).label)
+        start_nids = v0_nids[c0[1]]
 
     paths_v = [start_nids]          # per-var nid columns, in hop order
     paths_e: list[np.ndarray] = []  # per-edge tid columns
@@ -212,19 +283,23 @@ def match(g: Graph, plan: PatternPlan,
         total = len(dst)
         traversal.COUNTERS.cpu_ops += total + len(frontier)
 
-        keep = np.ones(total, dtype=bool)
-        if member[nvar] is not None:
-            keep &= member[nvar][dst]
+        # build the hop filter lazily: unconstrained hops never allocate
+        # (or intersect) an all-true mask
+        keep = None
+        if member_of(nvar) is not None:
+            keep = member[nvar][dst]
             traversal.COUNTERS.cpu_ops += total
         elif len(g.labels) > 1:
             # label constraint: dst must carry nvar's label
-            keep &= (g.vertex_label_code[dst]
-                     == g.label_code_of(pattern.vertex(nvar).label))
+            keep = (g.vertex_label_code[dst]
+                    == g.label_code_of(pattern.vertex(nvar).label))
         if edge_mask[evar] is not None:
-            keep &= edge_mask[evar][eid]
+            em = edge_mask[evar][eid]
+            keep = em if keep is None else (keep & em)
             traversal.COUNTERS.cpu_ops += total
 
-        row_rep, dst, eid = row_rep[keep], dst[keep], eid[keep]
+        if keep is not None:
+            row_rep, dst, eid = row_rep[keep], dst[keep], eid[keep]
         paths_v = [c[row_rep] for c in paths_v]
         paths_e = [c[row_rep] for c in paths_e]
         paths_v.append(dst)
@@ -258,8 +333,12 @@ def apply_deferred(g: Graph, pattern: Pattern, rel: Table, deferred: dict) -> Ta
         ids = np.asarray(rel.col(var))
         traversal.COUNTERS.record_fetches += len(ids) * len(preds)
         for p in preds:
-            col_mask = tbl.eval_predicate(p)
-            mask &= col_mask[ids]
+            if len(ids) < tbl.nrows:
+                # fewer bindings than records: point-evaluate on the
+                # referenced rows instead of scanning the whole column
+                mask &= tbl.eval_predicate(p, rows=ids)
+            else:
+                mask &= tbl.eval_predicate(p)[ids]
             traversal.COUNTERS.cpu_ops += len(ids)
     return rel.take(np.nonzero(mask)[0])
 

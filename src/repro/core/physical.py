@@ -179,6 +179,86 @@ class Select(PhysicalOp):
         return f"Select[{', '.join(repr(p) for p in self.preds)}]"
 
 
+class IndexScan(PhysicalOp):
+    """Index-backed access path replacing a Select-over-ScanTable pair:
+    postings of the most selective servable predicate seed the row set, the
+    remaining predicates are point-evaluated on those rows only, and the
+    table is gathered once via the tid-based RecordAM. Chosen by the
+    optimizer's cost-based access-path selection; falls back to the full
+    scan at runtime if the index was dropped since planning."""
+    kind = "IndexScan"
+
+    def __init__(self, name: str, epoch: int, preds: list, pick: int,
+                 access: str):
+        super().__init__()
+        self.name = name
+        self.epoch = epoch
+        self.preds = list(preds)
+        self.pick = int(pick)
+        self.access = access        # "hash" | "sorted" (explain provenance)
+
+    def params(self):
+        return (self.name, self.epoch, _preds_sig(self.preds), self.pick,
+                self.access)
+
+    def run(self, ctx, *inputs):
+        t = ctx.db.tables[self.name]
+        im = getattr(ctx.db, "_index_manager", None)
+        rows = im.lookup(self.name, self.preds[self.pick]) if im else None
+        if rows is None:            # index gone: degrade, don't fail
+            for pred in self.preds:
+                t = t.take(np.nonzero(t.eval_predicate(pred))[0])
+            return t
+        rows = np.sort(rows)        # scan row order, deterministically
+        for i, pred in enumerate(self.preds):
+            if i != self.pick and len(rows):
+                rows = rows[t.eval_predicate(pred, rows=rows)]
+        traversal.COUNTERS.record_fetches += len(rows) * max(len(self.preds), 1)
+        return t.take(rows)
+
+    def describe(self):
+        return (f"IndexScan[{self.name}: {self.preds[self.pick]!r} "
+                f"via {self.access}]")
+
+
+class IndexSelect(PhysicalOp):
+    """Zone-map skip-scan access path: the picked predicate is evaluated
+    chunk-wise through the column's zone maps (non-candidate chunks are
+    never read), remaining predicates point-evaluate on the survivors.
+    Effective when the column is clustered (e.g. monotone keys), where
+    min/max pruning touches O(hits) chunks."""
+    kind = "IndexSelect"
+
+    def __init__(self, name: str, epoch: int, preds: list, pick: int):
+        super().__init__()
+        self.name = name
+        self.epoch = epoch
+        self.preds = list(preds)
+        self.pick = int(pick)
+        self.access = "zone"
+
+    def params(self):
+        return (self.name, self.epoch, _preds_sig(self.preds), self.pick)
+
+    def run(self, ctx, *inputs):
+        t = ctx.db.tables[self.name]
+        im = getattr(ctx.db, "_index_manager", None)
+        rows = im.zone_rows(self.name, self.preds[self.pick]) if im else None
+        if rows is None:            # zones gone: degrade, don't fail
+            for pred in self.preds:
+                t = t.take(np.nonzero(t.eval_predicate(pred))[0])
+            return t
+        for i, pred in enumerate(self.preds):
+            if i != self.pick and len(rows):
+                rows = rows[t.eval_predicate(pred, rows=rows)]
+        traversal.COUNTERS.record_fetches += len(rows) * max(len(self.preds), 1)
+        return t.take(rows)
+
+    def describe(self):
+        return (f"IndexSelect[{self.name}: {self.preds[self.pick]!r} "
+                f"via zone-skip]")
+
+
 class Alias(PhysicalOp):
     """Qualify column names with the collection name before cluster joins."""
     kind = "Alias"
@@ -928,6 +1008,11 @@ def build_gcdia(db: Database, p, task, mode: str = "gredo", *,
 # Execution: bottom-up walk with signature memoization + inter-buffer reuse
 # ---------------------------------------------------------------------------
 
+# Per-operator result-footprint tracking (stats.nbytes / the bytes= explain
+# bits). Kept on by default; benchmarks timing bare operator latency may
+# disable it.
+TRACK_NBYTES = True
+
 
 def execute(node: PhysicalOp, ctx: ExecContext):
     sig = node.signature()
@@ -949,7 +1034,11 @@ def execute(node: PhysicalOp, ctx: ExecContext):
     node.stats.seconds += time.perf_counter() - t0
     node.stats.executed = True
     node.stats.rows = _result_rows(out)
-    node.stats.nbytes = value_nbytes(out)
+    if ctx.interbuffer is not None or TRACK_NBYTES:
+        # the footprint walk costs ~10µs/node: always on for the admission
+        # policy and (by default) for explain diagnostics; latency
+        # microbenchmarks flip TRACK_NBYTES off to time the bare operators
+        node.stats.nbytes = value_nbytes(out)
     ctx.nodes_run += 1
     if ctx.interbuffer is not None and node.cacheable:
         est = ctx.ests.get(id(node)) if ctx.ests is not None else None
@@ -1029,6 +1118,31 @@ def estimate(root: PhysicalOp, db: Database,
             s = sel(db.tables[n.preds[0].collection], n.preds) if n.preds else 1.0
             rows = first * s
             cost = cost_mod.cost_filter(first, len(n.preds))
+        elif isinstance(n, IndexScan):
+            tbl = db.tables[n.name]
+            nt = float(tbl.nrows)
+            sels = [tbl.stats(p.column).selectivity(p) for p in n.preds]
+            hits = nt * sels[n.pick]
+            rows = nt * float(np.prod(sels)) if sels else nt
+            cost = cost_mod.cost_index_lookup(nt, hits)
+            if len(n.preds) > 1:    # residual point-evaluation on the hits
+                cost += cost_mod.cost_filter(hits, len(n.preds) - 1)
+        elif isinstance(n, IndexSelect):
+            tbl = db.tables[n.name]
+            nt = float(tbl.nrows)
+            sels = [tbl.stats(p.column).selectivity(p) for p in n.preds]
+            rows = nt * float(np.prod(sels)) if sels else nt
+            im = getattr(db, "_index_manager", None)
+            idx = (im.get(n.name, n.preds[n.pick].column)
+                   if im is not None else None)
+            frac = idx.zone_fraction(n.preds[n.pick]) if idx is not None else None
+            chunks = (idx.zones.n_chunks
+                      if idx is not None and idx.zones is not None else 0.0)
+            cost = cost_mod.cost_zone_scan(nt, 1.0 if frac is None else frac,
+                                           chunks)
+            if len(n.preds) > 1:    # residuals run on every picked-pred hit
+                cost += cost_mod.cost_filter(nt * sels[n.pick],
+                                             len(n.preds) - 1)
         elif isinstance(n, PruneCols):
             rows = first
             cost = len(n.cols) * cost_mod.COST_CPU
@@ -1275,6 +1389,10 @@ def explain(root: PhysicalOp, stats: bool = False,
             src = getattr(n, "est_src", None)
             if src is not None:     # join-estimate provenance (per-bucket
                 bits.append(f"est_via={src}")   # overlap vs NDV fallback)
+        if stats or ests:           # access-path provenance (optimizer's
+            acc = getattr(n, "access", None)    # index/zone/full decision)
+            if acc is not None:
+                bits.append(f"access={acc}")
         suffix = "  (" + ", ".join(bits) + ")" if bits else ""
         lines.append(f"{pad}{n.describe()}{suffix}")
         for c in n.children:

@@ -100,6 +100,8 @@ def plan(db: Database, q: Query, enable_opt: bool = True,
             for p in table_pushdown.get(tcoll, []):
                 if p.column == tcol and p.is_equality:
                     rep = Predicate(f"{vvar}.{vcol}", p.op, p.value, p.value2)
+                    if rep in phi.get(vvar, []):
+                        continue    # the query already states it directly
                     phi.setdefault(vvar, []).append(rep)
                     notes.append(f"replicated {p} across join {jp} -> {rep}")
 

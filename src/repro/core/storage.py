@@ -112,7 +112,8 @@ class RaggedColumn:
 
     def take(self, idx) -> "RaggedColumn":
         idx = np.asarray(idx)
-        lens = self.lengths()[idx]
+        # per-row lengths of the selected rows only — O(|idx|), not O(n)
+        lens = self.offsets[idx + 1] - self.offsets[idx]
         out_off = np.zeros(len(idx) + 1, dtype=np.int64)
         np.cumsum(lens, out=out_off[1:])
         # gather: for each row, slice values[offsets[i]:offsets[i+1]]
@@ -491,9 +492,14 @@ class Table:
     def take(self, idx) -> "Table":
         return Table(self.name, {k: _col_take(v, idx) for k, v in self.columns.items()})
 
-    def eval_predicate(self, pred) -> np.ndarray:
-        """Vectorized predicate mask (the scan-based RecordAM's filter)."""
+    def eval_predicate(self, pred, rows=None) -> np.ndarray:
+        """Vectorized predicate mask (the scan-based RecordAM's filter).
+        With ``rows`` the predicate is evaluated on that row subset only
+        (mask aligns with ``rows``) — the point-evaluation path index
+        lookups and deferred predicates use to avoid O(n) column scans."""
         col = self.columns[pred.column]
+        if rows is not None:
+            col = _col_take(col, np.asarray(rows))
         if isinstance(col, DictColumn):
             if pred.op == "==":
                 return col.codes == col.encode(pred.value)
@@ -1018,6 +1024,16 @@ class Database:
         self.tables: dict[str, Table] = {}
         self.graphs: dict[str, Graph] = {}
         self._table_epochs: dict[str, int] = {}
+        self._index_manager = None      # created lazily by ``indexes``
+
+    @property
+    def indexes(self):
+        """The database's secondary-index catalog (one
+        :class:`repro.core.index.IndexManager`, created on first access)."""
+        if self._index_manager is None:
+            from .index import IndexManager
+            self._index_manager = IndexManager(self)
+        return self._index_manager
 
     def add_table(self, t: Table):
         if t.name in self.tables:

@@ -297,6 +297,70 @@ def q_opt_skew() -> Query:
     )
 
 
+def build_indexes(db: Database):
+    """Secondary indexes for the selective-access workload (the index
+    benchmark suite and tests): table-side sorted/zone indexes on the join
+    and lookup keys, plus the graph-side composite (label, attr) vertex
+    indexes that seed pattern candidates. Returns the IndexManager."""
+    im = db.indexes
+    im.create("Customer", "person_id")                      # sorted (int key)
+    im.create("Orders", "order_id", kind="zone")            # clustered: zones prune exactly
+    im.create("Product", "price")                           # sorted (random float)
+    im.create("Interested_in", "pid", label="Persons")      # composite (label, attr)
+    im.create("Interested_in", "popularity", label="Tags")
+    im.create("Interested_in", "content", label="Tags")     # hash over dict codes
+    return im
+
+
+def point_lookup_keys(db: Database) -> tuple[int, int]:
+    """A consistent (person_id, order_id) pair for ``q_point_lookup``:
+    order 0's customer and that customer's person, so the point query is
+    non-empty at every scale factor."""
+    orders = db.tables["Orders"]
+    c0 = int(np.asarray(orders.col("customer_id"))[0])
+    pid = int(np.asarray(db.tables["Customer"].col("person_id"))[c0])
+    oid = int(np.asarray(orders.col("order_id"))[0])
+    return pid, oid
+
+
+def q_point_lookup(pid: int = 777, oid: int = 4242) -> Query:
+    """Index exemplar 1: single-key equalities at ~1e-4 selectivity — the
+    graph-side composite (Persons, pid) index seeds the match frontier
+    from one vertex, the Customer.person_id sorted index replaces the
+    table scan, and the clustered Orders.order_id zone maps skip-scan the
+    document collection. Without indexes every predicate pays O(n) column
+    scans. (Use ``point_lookup_keys`` for a non-empty result.)"""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(
+        select=("Customer.id", "t.tid"),
+        froms=("Customer", "Orders"),
+        match=pat,
+        joins=(JoinPred("Orders.customer_id", "Customer.id"),
+               JoinPred("Customer.person_id", "p.pid")),
+        where=(Predicate("p.pid", "==", pid),
+               Predicate("Customer.person_id", "==", pid),
+               Predicate("Orders.order_id", "==", oid)),
+    )
+
+
+def q_range_narrow(lo: float = 100.0, hi: float = 100.5) -> Query:
+    """Index exemplar 2: tight numeric ranges — Product.price in a 0.1%
+    window (table-side sorted index) and t.popularity in a 2% window
+    (graph-side composite (Tags, popularity) index), flowing through the
+    q_g4-shaped Product -> Orders -> Customer -> pattern join chain."""
+    pat = chain_pattern("Interested_in", ("p", "Persons", "Interested_in", "t", "Tags"))
+    return Query(
+        select=("Customer.id", "t.tid"),
+        froms=("Product", "Orders", "Customer"),
+        match=pat,
+        joins=(JoinPred("Product.id", "Orders.product_id"),
+               JoinPred("Orders.customer_id", "Customer.id"),
+               JoinPred("Customer.person_id", "p.pid")),
+        where=(Predicate("Product.price", "range", lo, hi),
+               Predicate("t.popularity", "range", 0.90, 0.92)),
+    )
+
+
 def q_g5() -> Query:
     """G5: range predicate on edge property (match-trimming candidate:
     v-e-v with edge-only predicates, but projection references vertices)."""

@@ -1,0 +1,369 @@
+"""Delta-aware secondary indexes: posting/zone correctness vs. full scans,
+incremental maintenance under delta appends / tombstones / compaction
+(property-tested), epoch staleness detection, and the optimizer's
+cost-based access-path selection (IndexScan / IndexSelect / full scan,
+``access=`` provenance)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GredoEngine, physical, traversal
+from repro.core.index import ZoneMap
+from repro.core.schema import Predicate
+from repro.core.storage import Database, DictColumn, Graph, Table
+from repro.data import m2bench
+
+pytestmark = pytest.mark.fast
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+
+def _mk_graph_db(n_vertices=3000, n_edges=9000, seed=0, name="G"):
+    rng = np.random.default_rng(seed)
+    verts = Table("V", {
+        "vid": np.arange(n_vertices, dtype=np.int64),
+        "attr": rng.integers(0, 50, n_vertices),
+        "kind": DictColumn(values=[("a", "b", "c")[i % 3]
+                                   for i in range(n_vertices)]),
+    })
+    edges = Table("E", {
+        "svid": rng.integers(0, n_vertices, n_edges).astype(np.int64),
+        "tvid": rng.integers(0, n_vertices, n_edges).astype(np.int64),
+        "w": rng.uniform(0, 1, n_edges),
+    })
+    g = Graph(name, {"V": verts}, edges, "V", "V")
+    db = Database()
+    db.add_graph(g)
+    return db, g
+
+
+@pytest.fixture(scope="module")
+def dbs():
+    """(plain db, indexed db) — identical m2bench content."""
+    plain = m2bench.generate(sf=1)
+    indexed = m2bench.generate(sf=1)
+    m2bench.build_indexes(indexed)
+    return plain, indexed
+
+
+def _rows_multiset(t: Table):
+    cols = sorted(t.columns)
+    out = []
+    for i in range(t.nrows):
+        row = []
+        for c in cols:
+            col = t.col(c)
+            v = col.codes[i] if hasattr(col, "codes") else np.asarray(col)[i]
+            row.append(v.item() if hasattr(v, "item") else v)
+        out.append(tuple(row))
+    return sorted(out)
+
+
+def _scan_rows(tbl: Table, pred) -> np.ndarray:
+    return np.nonzero(tbl.eval_predicate(pred))[0]
+
+
+# ---------------------------------------------------------------------------
+# posting structures vs. full scans
+# ---------------------------------------------------------------------------
+
+
+def test_sorted_index_matches_scans_on_every_op():
+    db, g = _mk_graph_db()
+    im = db.indexes
+    im.create("G", "attr", label="V")
+    tbl = g.vertex_tables["V"]
+    for pred in (Predicate("v.attr", "==", 7),
+                 Predicate("v.attr", "in", (3, 5, 49)),
+                 Predicate("v.attr", "range", 10, 20),
+                 Predicate("v.attr", "<", 5),
+                 Predicate("v.attr", "<=", 5),
+                 Predicate("v.attr", ">", 44),
+                 Predicate("v.attr", ">=", 44)):
+        got = np.sort(im.lookup("G", pred, label="V"))
+        assert np.array_equal(got, _scan_rows(tbl, pred)), pred
+
+
+def test_hash_index_matches_scans_and_misses_cleanly():
+    db, g = _mk_graph_db()
+    im = db.indexes
+    idx = im.create("G", "kind", label="V")
+    assert idx.kind == "hash"
+    tbl = g.vertex_tables["V"]
+    for pred in (Predicate("v.kind", "==", "b"),
+                 Predicate("v.kind", "in", ("a", "c"))):
+        got = np.sort(im.lookup("G", pred, label="V"))
+        assert np.array_equal(got, _scan_rows(tbl, pred))
+    assert len(im.lookup("G", Predicate("v.kind", "==", "zzz"), label="V")) == 0
+    # range ops are not servable from a hash index
+    assert im.lookup("G", Predicate("v.kind", ">", "a"), label="V") is None
+
+
+def test_table_index_and_unsupported_column():
+    db = Database()
+    db.add_table(Table("T", {"k": np.arange(100, dtype=np.int64),
+                             "s": DictColumn(values=[str(i % 7)
+                                                     for i in range(100)])}))
+    im = db.indexes
+    im.create("T", "k")
+    p = Predicate("T.k", "range", 10, 19)
+    assert np.array_equal(np.sort(im.lookup("T", p)), np.arange(10, 20))
+    with pytest.raises(ValueError):
+        im.create("T", "s", kind="sorted")    # dict column can't sort-index
+    with pytest.raises(ValueError):
+        im.create("T", "s", kind="zone")      # ... and has no zone maps
+    assert im.lookup("T", Predicate("T.missing_kind", "==", 1)) is None
+
+
+# ---------------------------------------------------------------------------
+# zone maps
+# ---------------------------------------------------------------------------
+
+
+def test_zone_maps_prune_clustered_and_handle_nan():
+    vals = np.arange(10_000, dtype=np.float64)
+    zm = ZoneMap(vals, chunk=1024)
+    p = Predicate("T.x", "range", 2000, 2100)
+    cand = zm.candidate_chunks(p)
+    assert cand.sum() <= 2 and 0.0 < zm.fraction(p) < 0.3
+    assert np.array_equal(zm.masked_eval(vals, p),
+                          (vals >= 2000) & (vals <= 2100))
+    assert np.array_equal(zm.matching_rows(vals, p),
+                          np.arange(2000, 2101))
+    # NaN rows never match and all-NaN chunks are never candidates
+    vals2 = vals.copy()
+    vals2[:1024] = np.nan
+    zm2 = ZoneMap(vals2, chunk=1024)
+    p2 = Predicate("T.x", "<", 5000)
+    assert not zm2.candidate_chunks(p2)[0]
+    assert np.array_equal(zm2.masked_eval(vals2, p2), vals2 < 5000)
+
+
+def test_zone_map_extend_absorbs_partial_chunks():
+    zm = ZoneMap(np.arange(1500, dtype=np.float64), chunk=1024)
+    zm.extend(np.arange(1500, 2600, dtype=np.float64))
+    assert zm.n == 2600 and zm.n_chunks == 3
+    vals = np.arange(2600, dtype=np.float64)
+    p = Predicate("T.x", ">=", 2550)
+    assert np.array_equal(zm.matching_rows(vals, p), np.arange(2550, 2600))
+
+
+# ---------------------------------------------------------------------------
+# delta-aware maintenance: property tests under random mutation streams
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def mutation_script(draw):
+    ops = []
+    for _ in range(draw(st.integers(3, 7))):
+        kind = draw(st.sampled_from(("verts", "edges", "delete", "compact")))
+        ops.append((kind, draw(st.integers(1, 60)), draw(st.integers(0, 10**6))))
+    return ops
+
+
+@settings(max_examples=20, deadline=None)
+@given(mutation_script())
+def test_index_equals_scan_under_random_mutations(ops):
+    """Index-backed lookups ≡ full scans after every mutation: delta
+    appends, tombstone deletes, and mid-sequence compactions."""
+    db, g = _mk_graph_db(n_vertices=400, n_edges=1200)
+    im = db.indexes
+    im.create("G", "attr", label="V")
+    im.create("G", "kind", label="V")
+    im.create("G", "w")
+    pv = Predicate("v.attr", "range", 10, 30)
+    pk = Predicate("v.kind", "==", "b")
+    pe = Predicate("e.w", ">", 0.8)
+    for kind, size, seed in ops:
+        rng = np.random.default_rng(seed)
+        if kind == "verts":
+            n0 = g.vertex_tables["V"].nrows
+            g.insert_vertices("V", {
+                "vid": np.arange(n0, n0 + size, dtype=np.int64),
+                "attr": rng.integers(0, 50, size),
+                "kind": [("a", "b", "c")[i % 3] for i in range(size)]})
+        elif kind == "edges":
+            n = g.vertex_tables["V"].nrows
+            g.insert_edges({"svid": rng.integers(0, n, size).astype(np.int64),
+                            "tvid": rng.integers(0, n, size).astype(np.int64),
+                            "w": rng.uniform(0, 1, size)})
+        elif kind == "delete":
+            tids = rng.integers(0, g.edges.nrows, size)
+            g.delete_edges(tids)
+        else:
+            g.compact()
+        vt = g.vertex_tables["V"]
+        assert np.array_equal(np.sort(im.lookup("G", pv, label="V")),
+                              _scan_rows(vt, pv))
+        assert np.array_equal(np.sort(im.lookup("G", pk, label="V")),
+                              _scan_rows(vt, pk))
+        live = _scan_rows(g.edges, pe)
+        live = live[g.live_edge_mask()[live]]   # index is tombstone-filtered
+        assert np.array_equal(np.sort(im.lookup("G", pe)), live)
+
+
+def test_maintenance_is_incremental_and_rebuilds_only_at_compact():
+    db, g = _mk_graph_db()
+    im = db.indexes
+    idx = im.create("G", "attr", label="V")
+    p = Predicate("v.attr", "==", 11)
+    im.lookup("G", p, label="V")
+    assert idx.refreshes == 0 and idx.rebuilds == 0
+    n0 = g.vertex_tables["V"].nrows
+    g.insert_vertices("V", {"vid": np.arange(n0, n0 + 10, dtype=np.int64),
+                            "attr": np.full(10, 11),
+                            "kind": ["a"] * 10})
+    got = np.sort(im.lookup("G", p, label="V"))
+    assert idx.refreshes == 1 and idx.rebuilds == 0     # absorbed, not rebuilt
+    assert set(range(n0, n0 + 10)) <= set(got.tolist())
+    g.compact()     # pure merge: epoch unchanged -> postings stay valid
+    assert np.array_equal(np.sort(im.lookup("G", p, label="V")),
+                          _scan_rows(g.vertex_tables["V"], p))
+    assert idx.rebuilds == 0
+    # the first write after a compaction hits the base-snapshot token
+    # mismatch: full rebuild (the only one), not an incremental absorb
+    n1 = g.vertex_tables["V"].nrows
+    g.insert_vertices("V", {"vid": np.array([n1]), "attr": np.array([11]),
+                            "kind": ["b"]})
+    got = np.sort(im.lookup("G", p, label="V"))
+    assert idx.rebuilds == 1
+    assert np.array_equal(got, _scan_rows(g.vertex_tables["V"], p))
+
+
+def test_stale_epoch_is_refreshed_not_reused():
+    """Epoch stamping: a bumped source epoch forces a refresh before the
+    postings are read — a stale index is detected, never silently wrong."""
+    db, g = _mk_graph_db()
+    im = db.indexes
+    idx = im.create("G", "attr", label="V")
+    stamped = idx.epoch
+    n0 = g.vertex_tables["V"].nrows
+    g.insert_vertices("V", {"vid": np.array([n0]), "attr": np.array([49]),
+                            "kind": ["c"]})
+    assert db.epoch_of("G") != stamped      # write bumped the epoch
+    rows = im.lookup("G", Predicate("v.attr", "==", 49), label="V")
+    assert n0 in rows.tolist()              # lookup saw the refreshed index
+    assert idx.epoch == db.epoch_of("G")
+
+
+def test_table_replacement_rebuilds():
+    db = Database()
+    db.add_table(Table("T", {"k": np.arange(50, dtype=np.int64)}))
+    im = db.indexes
+    idx = im.create("T", "k")
+    db.add_table(Table("T", {"k": np.arange(50, 100, dtype=np.int64)}))
+    assert np.array_equal(im.lookup("T", Predicate("T.k", "==", 75)),
+                          np.array([25]))
+    assert idx.rebuilds == 1
+
+
+def test_tombstoned_edges_filtered_from_postings():
+    db, g = _mk_graph_db()
+    im = db.indexes
+    p = Predicate("e.w", ">=", 0.0)     # matches every live edge
+    im.create("G", "w")
+    before = im.lookup("G", p)
+    g.delete_edges(np.array([0, 1, 2]))
+    after = im.lookup("G", p)
+    assert len(after) == len(before) - 3
+    assert not ({0, 1, 2} & set(after.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# cost-based access-path selection + the physical operators
+# ---------------------------------------------------------------------------
+
+
+def test_optimizer_picks_index_scan_and_reports_access(dbs):
+    _, indexed = dbs
+    pid, oid = m2bench.point_lookup_keys(indexed)
+    eng = GredoEngine(indexed)
+    eng.query(m2bench.q_point_lookup(pid, oid))
+    out = eng.explain_last()
+    assert "IndexScan[Customer" in out and "access=sorted" in out
+    assert "IndexSelect[Orders" in out and "access=zone" in out
+    assert "access=index-seed[p]" in out
+    assert any(n.startswith("access-path") for n in eng.last_stats.rewrites)
+
+
+def test_unservable_predicate_stays_full_scan(dbs):
+    _, indexed = dbs
+    # != cannot be served from postings or pruned by zone maps
+    from repro.core.schema import Query
+    q2 = Query(select=("Customer.id",), froms=("Customer",),
+               joins=(), where=(Predicate("Customer.person_id", "!=", 3),))
+    eng = GredoEngine(indexed)
+    eng.query(q2)
+    out = eng.explain_last()
+    assert "IndexScan" not in out and "access=full-scan" in out
+
+
+def test_index_and_fullscan_agree_on_fixture_queries(dbs):
+    plain, indexed = dbs
+    pid, oid = m2bench.point_lookup_keys(indexed)
+    for q in (m2bench.q_point_lookup(pid, oid), m2bench.q_range_narrow(),
+              m2bench.q_g1(), m2bench.q_g4()):
+        r_plain = GredoEngine(plain).query(q)
+        r_idx = GredoEngine(indexed).query(q)
+        assert _rows_multiset(r_plain) == _rows_multiset(r_idx)
+
+
+def test_index_seeding_reduces_record_fetches(dbs):
+    plain, indexed = dbs
+    pid, oid = m2bench.point_lookup_keys(indexed)
+    q = m2bench.q_point_lookup(pid, oid)
+    e_plain, e_idx = GredoEngine(plain), GredoEngine(indexed)
+    e_plain.query(q)
+    io_plain = e_plain.last_stats.record_fetches
+    e_idx.query(q)
+    io_idx = e_idx.last_stats.record_fetches
+    assert io_idx < io_plain / 5, (io_idx, io_plain)
+
+
+def test_index_scan_falls_back_when_index_dropped(dbs):
+    _, indexed = dbs
+    pid, oid = m2bench.point_lookup_keys(indexed)
+    q = m2bench.q_point_lookup(pid, oid)
+    eng = GredoEngine(indexed)
+    want = _rows_multiset(eng.query(q))
+    dag = eng.optimized_plan(q)     # plan carries IndexScan/IndexSelect
+    im = indexed.indexes
+    im.drop("Customer", "person_id")
+    im.drop("Orders", "order_id")
+    try:
+        got = physical.execute(dag, physical.ExecContext(indexed))
+        assert _rows_multiset(got) == want      # degraded to scans, not wrong
+    finally:
+        im.create("Customer", "person_id")
+        im.create("Orders", "order_id", kind="zone")
+
+
+def test_estimates_cover_index_operators(dbs):
+    _, indexed = dbs
+    pid, oid = m2bench.point_lookup_keys(indexed)
+    dag = GredoEngine(indexed).optimized_plan(m2bench.q_point_lookup(pid, oid))
+    ests = physical.estimate(dag, indexed)
+    kinds = set()
+
+    def walk(n):
+        kinds.add(n.kind)
+        for c in n.children:
+            walk(c)
+
+    walk(dag)
+    assert "IndexScan" in kinds and "IndexSelect" in kinds
+    assert all(np.isfinite(r + c) and r >= 0 and c >= 0
+               for r, c in ests.values())
+
+
+def test_small_labels_skip_the_index_machinery(dbs):
+    """Below MIN_INDEX_ROWS a vectorized scan wins: the Tags-side range
+    predicate stays on the mask-scan path even though an index exists."""
+    _, indexed = dbs
+    eng = GredoEngine(indexed)
+    eng.query(m2bench.q_range_narrow())
+    assert "access=mask-scan" in eng.explain_last()
