@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index
+.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace
 
 # tier-1 verification (the full suite — unchanged)
 test:
@@ -43,3 +43,9 @@ bench-optimizer:
 # scans dominate the fixed executor overhead there)
 bench-index:
 	python -m benchmarks.run --suite index --sf 80
+
+# telemetry smoke: one GCDIA reuse ladder traced end-to-end, Chrome-trace
+# JSON exported to experiments/trace_gcdia.json (schema-validated; open in
+# Perfetto), kernel roofline attribution, disabled-telemetry overhead guard
+bench-trace:
+	python -m benchmarks.run --suite trace --fast

@@ -63,6 +63,17 @@ def _index_suite(sf: int, fast: bool) -> list[dict]:
     return rows
 
 
+def _trace_suite(sf: int, fast: bool) -> list[dict]:
+    """Telemetry: traced GCDIA reuse ladder exported as Chrome trace-event
+    JSON (schema-validated; experiments/trace_gcdia.json — open it in
+    Perfetto), kernel roofline attribution from the fenced GCDA spans, and
+    the disabled-telemetry overhead guard vs the pre-telemetry executor."""
+    from . import trace_bench
+    rows = trace_bench.run_suite(sf=sf, fast=fast)
+    trace_bench.print_rows(rows)
+    return rows
+
+
 def _save(all_rows: list[dict]) -> None:
     """Merge into experiments/bench_results.json: rows of the tables just
     measured replace their previous records; other suites' rows persist."""
@@ -89,14 +100,16 @@ def main() -> None:
                     help="skip the scale-factor sweep / use smoke sizes")
     ap.add_argument("--suite",
                     choices=("paper", "update", "gcdia", "optimizer",
-                             "index", "all"),
+                             "index", "trace", "all"),
                     default="paper",
                     help="paper: GCDI/GCDA tables; update: write-path "
                          "throughput (delta store vs full rebuild); gcdia: "
                          "operator-level inter-buffer reuse (per-operator "
                          "timings + hit rates); optimizer: naive-order vs "
                          "cost-based rewritten DAG latency; index: "
-                         "secondary-index access paths vs full scans")
+                         "secondary-index access paths vs full scans; "
+                         "trace: telemetry smoke — traced GCDIA with "
+                         "Chrome-trace export + disabled-overhead guard")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -114,6 +127,12 @@ def main() -> None:
     if args.suite in ("index", "all"):
         all_rows += _index_suite(sf=args.sf, fast=args.fast)
         if args.suite == "index":
+            _save(all_rows)
+            return
+
+    if args.suite in ("trace", "all"):
+        all_rows += _trace_suite(sf=args.sf, fast=args.fast)
+        if args.suite == "trace":
             _save(all_rows)
             return
 

@@ -73,6 +73,30 @@ def random_access_matrix(table: Table, group_col: str, value_col: str,
 # ---------------------------------------------------------------------------
 
 
+def flops_estimate(op: str, shapes: Sequence[Sequence[int]],
+                   iters: int = 1) -> float:
+    """Analytic floating-point work of one analytical-operator execution,
+    from its input shapes — the kernel-span payload telemetry attaches and
+    ``benchmarks/roofline.py`` compares against the hardware roofline.
+    ``op`` is a physical-operator kind ("MatMul" / "Similarity" /
+    "Regression"); unknown ops and degenerate shapes cost 0."""
+    shapes = [tuple(int(d) for d in s) for s in shapes]
+    if not shapes or len(shapes[0]) != 2:
+        return 0.0
+    m, k = shapes[0]
+    if op == "MatMul":
+        n = shapes[1][1] if len(shapes) > 1 and len(shapes[1]) == 2 else m
+        return 2.0 * m * k * n
+    if op == "Similarity":
+        # fused cosine: the dot products plus both norm reductions
+        n = shapes[1][0] if len(shapes) > 1 and len(shapes[1]) == 2 else m
+        return 3.0 * m * k * n
+    if op == "Regression":
+        # per iteration: forward matvec + gradient matvec over (m, k)
+        return 4.0 * m * k * max(iters, 1)
+    return 0.0
+
+
 def multiply(x: jax.Array, y: jax.Array, *, mesh: Optional[Mesh] = None,
              use_kernel: bool | None = None) -> jax.Array:
     """MULTIPLY: Z = X·Y via the tiled MXU kernel; with a mesh, Z tiles are

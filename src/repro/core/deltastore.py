@@ -35,10 +35,16 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard, typing only
 # ---------------------------------------------------------------------------
 
 
+WRITE_COUNTER_FIELDS = ("write_batches", "write_rows", "write_ops",
+                        "compactions", "compact_ops")
+
+
 class WriteCounters:
     """Elementary-op counters separating the O(batch) write path from the
     amortized O(V+E) compaction work, so benchmarks/tests can assert that the
-    hot path never performs rebuild-scale work."""
+    hot path never performs rebuild-scale work. Each :class:`~repro.core.
+    storage.Graph` owns one (``graph.write_counters``); the engine registers
+    them into its telemetry registry as pull sources via :meth:`metrics`."""
 
     def __init__(self):
         self.write_batches = 0
@@ -47,11 +53,54 @@ class WriteCounters:
         self.compactions = 0
         self.compact_ops = 0    # ops charged by compaction (O(V+E))
 
+    def bump(self, **ops) -> None:
+        for k, v in ops.items():
+            setattr(self, k, getattr(self, k) + v)
+
+    def metrics(self) -> dict:
+        return {f: getattr(self, f) for f in WRITE_COUNTER_FIELDS}
+
     def reset(self):
         self.__init__()
 
 
-WRITE_COUNTERS = WriteCounters()
+class _RegistryWriteCounters:
+    """Deprecated process-global view of write activity. Historically this
+    module kept one ``WriteCounters`` singleton, which leaked state across
+    ``Database`` instances and tests; counters now live per graph. This alias
+    keeps the old read/``reset()`` API working by delegating to the
+    ``deltastore.*`` counters of ``telemetry.default_registry()``, which every
+    graph mirrors its charges into. New code should read
+    ``graph.write_counters`` or a registry snapshot instead."""
+
+    def _counter(self, field: str):
+        from .telemetry import default_registry
+        return default_registry().counter(f"deltastore.{field}")
+
+    def __getattr__(self, name: str):
+        if name in WRITE_COUNTER_FIELDS:
+            return self._counter(name).value
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in WRITE_COUNTER_FIELDS:
+            self._counter(name).value = value
+        else:
+            object.__setattr__(self, name, value)
+
+    def bump(self, **ops) -> None:
+        for k, v in ops.items():
+            self._counter(k).value += v
+
+    def metrics(self) -> dict:
+        return {f: getattr(self, f) for f in WRITE_COUNTER_FIELDS}
+
+    def reset(self) -> None:
+        for f in WRITE_COUNTER_FIELDS:
+            self._counter(f).value = 0
+
+
+WRITE_COUNTERS = _RegistryWriteCounters()
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ import numpy as np
 
 from . import join as join_mod, optimizer as optimizer_mod
 from . import pattern as pattern_mod, physical, planner
+from . import telemetry as telemetry_mod
 from .interbuffer import InterBuffer
 from .schema import GCDIATask, Query
 from .storage import Database, Table
@@ -55,12 +56,32 @@ class ExecStats:
     compactions: int = 0
 
 
+@dataclasses.dataclass
+class Profile:
+    """What ``GredoEngine.profile`` returns: the query result plus every
+    telemetry view of that one execution."""
+
+    result: object
+    trace: Optional["telemetry_mod.QueryTrace"]
+    registry_delta: dict                # per-query metric deltas
+    qerrors: list                       # flagged MisEstimates of this plan
+    seconds: float
+
+    def render(self, top: int = 0) -> str:
+        lines = [self.trace.render(top=top) if self.trace is not None else ""]
+        if self.qerrors:
+            lines.append("== q-error flags ==")
+            lines += [f"  {m!r}" for m in self.qerrors]
+        return "\n".join(l for l in lines if l)
+
+
 class GredoEngine:
     def __init__(self, db: Database, mode: str = "gredo",
                  interbuffer_bytes: int = 2 << 30,
                  enable_optimizer: bool = True,
                  admit_cost_per_byte: float = 0.05,
-                 join_enum: str = "dp"):
+                 join_enum: str = "dp",
+                 telemetry: "bool | telemetry_mod.Telemetry | None" = None):
         assert mode in ("gredo", "dual", "single")
         assert join_enum in ("dp", "dp-leftdeep", "greedy")
         self.db = db
@@ -79,6 +100,63 @@ class GredoEngine:
         self.last_naive_dag: Optional[physical.PhysicalOp] = None
         self._last_ests: Optional[dict] = None
         self.last_report: Optional[optimizer_mod.OptReport] = None
+        # observability (off by default — the hot path then only pays
+        # `trace is None` checks). `telemetry=True` builds a fresh session;
+        # passing a Telemetry instance shares a registry across engines.
+        self.telemetry: Optional[telemetry_mod.Telemetry] = None
+        if telemetry:
+            self.enable_telemetry(telemetry if not isinstance(telemetry, bool)
+                                  else None)
+        # per-query inter-buffer counter delta (cheap: 6 ints), kept even
+        # with telemetry off so explain_last never shows cumulative drift
+        self.last_interbuffer_delta: dict = {}
+        self.last_registry_delta: dict = {}
+        self._pre_snapshot: dict = {}
+
+    # ------------------------------------------------------------- telemetry
+    def enable_telemetry(self, session: Optional["telemetry_mod.Telemetry"]
+                         = None) -> "telemetry_mod.Telemetry":
+        """Attach (or build) a telemetry session and register this engine's
+        subsystems as registry sources: inter-buffer admission, per-graph
+        delta-store write counters, and secondary-index maintenance."""
+        tel = session if session is not None else telemetry_mod.Telemetry()
+        reg = tel.registry
+        reg.register_source("interbuffer", self.interbuffer.metrics)
+        db = self.db
+
+        def _graph_writes() -> dict:
+            out: dict[str, float] = {}
+            for name, g in db.graphs.items():
+                for k, v in g.write_counters.metrics().items():
+                    out[f"{name}.{k}"] = v
+            return out
+
+        def _index_counters() -> dict:
+            im = getattr(db, "_index_manager", None)
+            return im.metrics() if im is not None else {}
+
+        reg.register_source("deltastore", _graph_writes)
+        reg.register_source("index", _index_counters)
+        self.telemetry = tel
+        return tel
+
+    def profile(self, q: "Query | GCDIATask", **kw) -> Profile:
+        """Run one GCDI query / GCDIA task with tracing on (temporarily
+        enabling telemetry if the engine has none) and return the result
+        together with its trace, per-query metric deltas, and q-error
+        flags."""
+        transient = self.telemetry is None
+        tel = self.telemetry or self.enable_telemetry()
+        try:
+            result = (self.analyze(q, **kw) if isinstance(q, GCDIATask)
+                      else self.query(q, **kw))
+            return Profile(result=result, trace=tel.collector.last(),
+                           registry_delta=dict(self.last_registry_delta),
+                           qerrors=list(tel.qerror.last_plan),
+                           seconds=self.last_stats.seconds)
+        finally:
+            if transient:
+                self.telemetry = None
 
     @property
     def last_ests(self) -> Optional[dict]:
@@ -123,11 +201,13 @@ class GredoEngine:
 
     def query(self, q: Query) -> Table:
         traversal.COUNTERS.reset()
+        trace, ib0 = self._begin_query(f"query[{','.join(q.source_names())}]")
         t0 = time.perf_counter()
         p = self.plan(q)
         naive = physical.build_gcdi(self.db, p, mode=self.mode)
         dag, report = self._lower(naive)
-        ctx = physical.ExecContext(self.db)
+        ctx = physical.ExecContext(self.db, trace=trace,
+                                   fence_device=self._fence_device())
         result = physical.execute(dag, ctx)
         notes = list(p.notes)
         if self.mode == "single" and q.match is not None:
@@ -143,6 +223,7 @@ class GredoEngine:
             operators=physical.collect_stats(dag),
             rewrites=report.notes() if report else [])
         self._attach_delta_stats(q)
+        self._finish_query(trace, ctx, ib0)
         return result
 
     def explain(self, q: Query) -> str:
@@ -161,10 +242,13 @@ class GredoEngine:
         lines += ["  " + n for n in report.notes()]
         return "\n".join(lines)
 
-    def explain_last(self) -> str:
+    def explain_last(self, top: int = 0) -> str:
         """Pre/post-rewrite plans of the most recent execution, the executed
-        DAG annotated with actual rows/bytes/seconds *and* the cost-model
-        est_rows/est_cost per operator, plus inter-buffer counters."""
+        DAG annotated with actual rows/bytes/seconds, the operator's share
+        of total plan time, *and* the cost-model est_rows/est_cost per
+        operator, plus inter-buffer counters (this query's delta, then the
+        engine-lifetime cumulative figures). ``top > 0`` appends the k
+        hottest operators sorted by wall seconds."""
         if self.last_dag is None:
             return "(nothing executed yet)"
         lines = []
@@ -173,11 +257,20 @@ class GredoEngine:
                       physical.explain(self.last_naive_dag, db=self.db),
                       "== executed DAG (post-rewrite, actual vs. estimated) =="]
         lines.append(physical.explain(self.last_dag, stats=True,
-                                      ests=self.last_ests))
+                                      ests=self.last_ests, top=top))
         if self.last_report is not None:
             lines.append("== rewrites ==")
             lines += ["  " + n for n in self.last_report.notes()]
-        lines.append(f"interbuffer: {self.interbuffer.counters()}")
+        if self.last_interbuffer_delta:
+            d = self.last_interbuffer_delta
+            lines.append("interbuffer (this query): "
+                         + " ".join(f"{k}={d[k]:+g}" for k in
+                                    ("hits", "misses", "bypasses", "evictions")
+                                    if k in d))
+        lines.append(f"interbuffer: {self.interbuffer.counters()} (cumulative)")
+        if self.telemetry is not None and self.telemetry.qerror.last_plan:
+            lines.append("== q-error flags ==")
+            lines += [f"  {m!r}" for m in self.telemetry.qerror.last_plan]
         return "\n".join(lines)
 
     def _attach_delta_stats(self, q: Query) -> None:
@@ -185,6 +278,63 @@ class GredoEngine:
             g = self.db.graphs[q.match.graph]
             self.last_stats.delta = g.delta.stats()
             self.last_stats.compactions = g.compactions
+
+    # ---------------------------------------------------- telemetry plumbing
+    def _fence_device(self) -> bool:
+        return self.telemetry is not None and self.telemetry.fence_device
+
+    def _begin_query(self, label: str):
+        """Open the per-query observability window: an inter-buffer counter
+        snapshot (always — 6 ints), and with telemetry on, a registry
+        snapshot plus a fresh trace."""
+        ib0 = self.interbuffer.metrics()
+        tel = self.telemetry
+        if tel is None:
+            return None, ib0
+        self._pre_snapshot = tel.registry.snapshot()
+        tel.qerror.start_plan()
+        return tel.collector.start_query(label), ib0
+
+    def _finish_query(self, trace, ctx: physical.ExecContext,
+                      ib0: dict) -> None:
+        self.last_interbuffer_delta = telemetry_mod.Registry.delta(
+            ib0, self.interbuffer.metrics())
+        tel = self.telemetry
+        if tel is None:
+            return
+        seconds = self.last_stats.seconds
+        if trace is not None:
+            trace.close(seconds=seconds, nodes_run=ctx.nodes_run,
+                        nodes_reused=ctx.nodes_reused)
+            tel.collector.trim()    # re-check the span bound now that this
+                                    # query's spans are all recorded
+        reg = tel.registry
+        reg.counter("engine.queries").inc()
+        reg.histogram("engine.query_seconds").observe(seconds)
+        label = trace.label if trace is not None else "query"
+        if self.last_report is not None:
+            for rule, n in self.last_report.rule_counts().items():
+                reg.counter(f"optimizer.rewrites.{rule}").inc(n)
+        ests = self.last_ests or {}
+        seen: set[int] = set()
+
+        def walk(n: physical.PhysicalOp) -> None:
+            if id(n) in seen:
+                return
+            seen.add(id(n))
+            acc = getattr(n, "access", None)
+            if acc is not None and (n.stats.executed or n.stats.cached):
+                reg.counter(f"optimizer.access.{acc}").inc()
+            est = ests.get(id(n))
+            if n.stats.executed and est is not None and n.stats.rows is not None:
+                tel.qerror.record(label, n.kind, n.describe(),
+                                  est[0], n.stats.rows)
+            for c in n.children:
+                walk(c)
+
+        walk(self.last_dag)
+        self.last_registry_delta = telemetry_mod.Registry.delta(
+            self._pre_snapshot, reg.snapshot())
 
     # ------------------------------------------------------------------ GCDA
     def analyze(self, task: GCDIATask, *, use_kernel: bool | None = None,
@@ -195,6 +345,7 @@ class GredoEngine:
         signature; signatures embed source write epochs, so reuse survives
         exactly until a source collection mutates."""
         traversal.COUNTERS.reset()
+        trace, ib0 = self._begin_query(f"gcdia:{task.analytics.op}")
         t0 = time.perf_counter()
         p = self.plan(task.integration)
         naive = physical.build_gcdia(self.db, p, task, mode=self.mode,
@@ -202,7 +353,8 @@ class GredoEngine:
         dag, report = self._lower(naive)
         ests = physical.estimate(dag, self.db)
         ctx = physical.ExecContext(self.db, interbuffer=self.interbuffer,
-                                   ests=ests)
+                                   ests=ests, trace=trace,
+                                   fence_device=self._fence_device())
         out = physical.execute(dag, ctx)
         self.last_dag = dag
         self.last_naive_dag = naive
@@ -217,6 +369,7 @@ class GredoEngine:
             rewrites=report.notes() if report else [],
             nodes_reused=ctx.nodes_reused)
         self._attach_delta_stats(task.integration)
+        self._finish_query(trace, ctx, ib0)
         return out
 
     # ------------------------------------------------------- graph utilities

@@ -584,5 +584,17 @@ class IndexManager:
                 for k, idx in sorted(self._indexes.items(),
                                      key=lambda kv: str(kv[0]))}
 
+    def metrics(self) -> dict:
+        """Flat numeric counters per index (telemetry registry source):
+        ``<collection>[/<label>]/<column>.{lookups,refreshes,rebuilds}``.
+        Maintenance stays lazy — this reads stamps, it never refreshes."""
+        out: dict[str, int] = {}
+        for k, idx in sorted(self._indexes.items(), key=lambda kv: str(kv[0])):
+            base = "/".join(str(p) for p in k if p is not None)
+            out[f"{base}.lookups"] = idx.lookups
+            out[f"{base}.refreshes"] = idx.refreshes
+            out[f"{base}.rebuilds"] = idx.rebuilds
+        return out
+
     def __len__(self):
         return len(self._indexes)

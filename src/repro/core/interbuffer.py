@@ -102,6 +102,14 @@ class InterBuffer:
                 f"bypasses={self.bypasses} evictions={self.evictions} "
                 f"entries={len(self)} bytes={self._nbytes}")
 
+    def metrics(self) -> dict:
+        """Numeric counter snapshot — the telemetry registry source. hits/
+        misses/bypasses/evictions are cumulative (delta-able); entries/bytes
+        are point-in-time gauges."""
+        return {"hits": self.hits, "misses": self.misses,
+                "bypasses": self.bypasses, "evictions": self.evictions,
+                "entries": len(self), "bytes": self._nbytes}
+
     def nbytes(self) -> int:
         return self._nbytes
 

@@ -68,6 +68,15 @@ class OptReport:
                    f"{self.est_cost_after:.3g}")
         return out
 
+    def rule_counts(self) -> dict:
+        """Rewrites applied per rule name — what the engine feeds into its
+        ``optimizer.rewrites.<rule>`` telemetry counters."""
+        counts: dict[str, int] = {}
+        for note in self.rewrites:
+            rule = note.split(":", 1)[0].strip().replace(" ", "_")
+            counts[rule] = counts.get(rule, 0) + 1
+        return counts
+
 
 def optimize(root: ph.PhysicalOp, db: Database, cache: Optional[dict] = None,
              join_enum: str = "dp") -> tuple[ph.PhysicalOp, OptReport]:

@@ -34,6 +34,7 @@ import numpy as np
 from . import analytics
 from . import join as join_mod
 from . import pattern as pattern_mod
+from . import telemetry
 from . import traversal
 from .interbuffer import InterBuffer, fingerprint, value_nbytes
 from .schema import JoinPred, Pattern, Query
@@ -61,11 +62,16 @@ class ExecContext:
     consulted at cacheable nodes (cross-task structural reuse)."""
 
     def __init__(self, db: Database, interbuffer: Optional[InterBuffer] = None,
-                 ests: Optional[dict] = None):
+                 ests: Optional[dict] = None,
+                 trace: Optional["telemetry.QueryTrace"] = None,
+                 fence_device: bool = False):
         self.db = db
         self.interbuffer = interbuffer
         self.ests = ests          # id(node) -> (est_rows, est_cost): feeds
                                   # the cost-aware inter-buffer admission
+        self.trace = trace        # telemetry span sink; None = tracing off
+        self.fence_device = fence_device  # block_until_ready GCDA outputs
+                                          # inside their span (tracing only)
         self.memo: dict = {}
         self.nodes_run = 0
         self.nodes_reused = 0     # inter-buffer hits during this execution
@@ -1015,9 +1021,15 @@ TRACK_NBYTES = True
 
 
 def execute(node: PhysicalOp, ctx: ExecContext):
+    # The disabled-telemetry path must stay within ~2% of the pre-telemetry
+    # executor: every tracing addition below is gated on one local None check.
+    trace = ctx.trace
     sig = node.signature()
     if sig in ctx.memo:
         node.stats.memoized = True
+        if trace is not None:
+            trace.instant(node.kind, detail=node.describe(), cache="memo",
+                          rows=node.stats.rows)
         return ctx.memo[sig]
     if ctx.interbuffer is not None and node.cacheable:
         hit = ctx.interbuffer.get(fingerprint(sig))
@@ -1027,7 +1039,17 @@ def execute(node: PhysicalOp, ctx: ExecContext):
             node.stats.nbytes = value_nbytes(hit)
             ctx.nodes_reused += 1
             ctx.memo[sig] = hit
+            if trace is not None:
+                trace.instant(node.kind, detail=node.describe(),
+                              cache="interbuffer-hit", rows=node.stats.rows,
+                              nbytes=node.stats.nbytes)
             return hit
+    if trace is not None:
+        # spans open before the child recursion so the parent covers its
+        # inputs and the trace nests exactly like the DAG
+        gcda = node.kind in telemetry.GCDA_KINDS
+        sid = trace.begin(node.kind, cat="gcda" if gcda else "gcdi",
+                          detail=node.describe())
     inputs = [execute(c, ctx) for c in node.children]
     t0 = time.perf_counter()
     out = node.run(ctx, *inputs)
@@ -1040,6 +1062,29 @@ def execute(node: PhysicalOp, ctx: ExecContext):
         # microbenchmarks flip TRACK_NBYTES off to time the bare operators
         node.stats.nbytes = value_nbytes(out)
     ctx.nodes_run += 1
+    if trace is not None:
+        args: dict = {"sig": fingerprint(sig)}
+        if gcda:
+            args["dispatch_s"] = node.stats.seconds
+            if ctx.fence_device:
+                sync = telemetry.fence(out)
+                args["sync_s"] = sync
+                node.stats.seconds += sync  # device wait belongs to the op
+            args.update(telemetry.kernel_args(node.kind, tuple(inputs), out,
+                                              iters=getattr(node, "iters", 1)))
+        if node.stats.rows is not None:
+            args["rows"] = node.stats.rows
+        if node.stats.nbytes:
+            args["nbytes"] = node.stats.nbytes
+        est = ctx.ests.get(id(node)) if ctx.ests is not None else None
+        if est is not None:
+            args["est_rows"] = est[0]
+            if node.stats.rows is not None:
+                args["q_error"] = telemetry.q_error(est[0], node.stats.rows)
+        acc = getattr(node, "access", None)
+        if acc is not None:
+            args["access"] = acc
+        trace.end(sid, **args)
     if ctx.interbuffer is not None and node.cacheable:
         est = ctx.ests.get(id(node)) if ctx.ests is not None else None
         out = ctx.interbuffer.put(fingerprint(sig), out,
@@ -1349,19 +1394,29 @@ def collect_stats(root: PhysicalOp) -> list[dict]:
     return out
 
 
+def total_seconds(root: PhysicalOp) -> float:
+    """Summed per-operator wall seconds over distinct executed nodes —
+    ``stats.seconds`` wraps only ``node.run``, so this is self-time and the
+    denominator of the ``pct=`` explain bits."""
+    return sum(r["seconds"] for r in collect_stats(root) if r["executed"])
+
+
 def explain(root: PhysicalOp, stats: bool = False,
             db: Optional[Database] = None,
-            ests: Optional[dict] = None) -> str:
+            ests: Optional[dict] = None, top: int = 0) -> str:
     """GCDIPlan.explain()-style rendering of the operator DAG. With
     ``stats=True`` (after execution) each row shows rows/bytes/seconds and
-    whether the operator was satisfied from the inter-buffer; with ``db``
-    (or a precomputed ``ests`` map) each row also shows the §6.3 cost-model
-    estimates — so a post-execution rendering puts est_rows next to the
-    actual rows per operator."""
+    the operator's share of total plan time, plus whether it was satisfied
+    from the inter-buffer; with ``db`` (or a precomputed ``ests`` map) each
+    row also shows the §6.3 cost-model estimates — so a post-execution
+    rendering puts est_rows next to the actual rows per operator.
+    ``top > 0`` appends the k hottest operators sorted by wall seconds."""
     lines: list[str] = []
     seen: dict[int, int] = {}
     if ests is None:
         ests = estimate(root, db) if db is not None else {}
+    total = max(total_seconds(root), 1e-12) if stats else 1.0
+    hot: list[PhysicalOp] = []
 
     def walk(n: PhysicalOp, depth: int):
         pad = "  " * depth
@@ -1382,6 +1437,8 @@ def explain(root: PhysicalOp, stats: bool = False,
                 bits.append(f"bytes={s.nbytes}")
             if s.executed:
                 bits.append(f"ms={s.seconds * 1e3:.2f}")
+                bits.append(f"pct={s.seconds / total * 100:.1f}%")
+                hot.append(n)
         if id(n) in ests:
             er, ec = ests[id(n)]
             bits.append(f"est_rows={er:.3g}")
@@ -1399,4 +1456,10 @@ def explain(root: PhysicalOp, stats: bool = False,
             walk(c, depth + 1)
 
     walk(root, 0)
+    if stats and top > 0 and hot:
+        hot.sort(key=lambda n: n.stats.seconds, reverse=True)
+        lines.append(f"== top {min(top, len(hot))} operators by time ==")
+        for n in hot[:top]:
+            lines.append(f"  {n.describe()}: ms={n.stats.seconds * 1e3:.2f} "
+                         f"({n.stats.seconds / total * 100:.1f}%)")
     return "\n".join(lines)

@@ -700,6 +700,7 @@ class Graph:
         self.epoch = 0
         self.compactions = 0
         self.last_compact_seconds = 0.0
+        self.write_counters = deltastore.WriteCounters()
         self.delta_config = delta_config or deltastore.DeltaConfig()
         self._set_base(dict(vertex_tables), edges)
 
@@ -895,11 +896,18 @@ class Graph:
         return pos[order], dst[order], eid[order]
 
     # ---- updates (paper §4.4 staged insertion, LSM-buffered) ----
+    def _charge_write(self, **ops) -> None:
+        """Charge write/compaction cost to this graph's counters and mirror
+        into the process-global registry (the deprecated module-level
+        ``deltastore.WRITE_COUNTERS`` view reads the latter)."""
+        from . import deltastore
+        self.write_counters.bump(**ops)
+        deltastore.WRITE_COUNTERS.bump(**ops)
+
     def insert_vertices(self, label: str, rows: dict[str, np.ndarray]) -> None:
         """Vertex-only batch insertion: records buffered (RecordAM deferred
         to the lazy merge), fresh nids appended after the base nid space;
         adjacency untouched (the paper's vertex-only fast path). O(batch)."""
-        from .deltastore import WRITE_COUNTERS
         base = self._base_vertex_tables[label]
         cols = {k: np.asarray(rows[k]) if not isinstance(base.columns[k], RaggedColumn)
                 else rows[k] for k in base.columns}
@@ -917,9 +925,7 @@ class Graph:
         self._vlc.append(np.full(n_new, self._label_code[label], dtype=np.int8))
         self._vvo.append(np.arange(vid0, vid0 + n_new, dtype=np.int64))
         self.epoch += 1
-        WRITE_COUNTERS.write_batches += 1
-        WRITE_COUNTERS.write_rows += n_new
-        WRITE_COUNTERS.write_ops += n_new
+        self._charge_write(write_batches=1, write_rows=n_new, write_ops=n_new)
         self._maybe_compact()
 
     def insert_edges(self, rows: dict[str, np.ndarray]) -> None:
@@ -941,16 +947,14 @@ class Graph:
         self._src_nid.append(src_nid)
         self._dst_nid.append(dst_nid)
         self.epoch += 1
-        c = deltastore.WRITE_COUNTERS
-        c.write_batches += 1
-        c.write_rows += n_new
-        c.write_ops += n_new * max(int(np.ceil(np.log2(max(n_new, 2)))), 1)
+        self._charge_write(
+            write_batches=1, write_rows=n_new,
+            write_ops=n_new * max(int(np.ceil(np.log2(max(n_new, 2)))), 1))
         self._maybe_compact()
 
     def delete_edges(self, edge_tids: np.ndarray) -> None:
         """Edge deletion: tombstone bitmap only — edge tids stay stable and
         the record rows remain in place until compaction. O(batch)."""
-        from .deltastore import WRITE_COUNTERS
         tids = np.asarray(edge_tids)
         if len(tids) == 0:
             return
@@ -958,9 +962,8 @@ class Graph:
         if fresh == 0:
             return  # idempotent re-delete: content (and epoch) unchanged
         self.epoch += 1
-        WRITE_COUNTERS.write_batches += 1
-        WRITE_COUNTERS.write_rows += fresh
-        WRITE_COUNTERS.write_ops += len(tids)
+        self._charge_write(write_batches=1, write_rows=fresh,
+                           write_ops=len(tids))
         self._maybe_compact()
 
     # ---- compaction (the amortized rebuild) ----
@@ -978,7 +981,6 @@ class Graph:
         tombstones renumbers edge tids, which IS observable through
         tid-projecting queries — so that case advances the epoch."""
         import time
-        from .deltastore import WRITE_COUNTERS
         if not self.delta.has_pending():
             return
         t0 = time.perf_counter()
@@ -992,8 +994,9 @@ class Graph:
             self.epoch += 1
         self.compactions += 1
         self.last_compact_seconds = time.perf_counter() - t0
-        WRITE_COUNTERS.compactions += 1
-        WRITE_COUNTERS.compact_ops += self._n_base_vertices + self._n_base_edges
+        self._charge_write(
+            compactions=1,
+            compact_ops=self._n_base_vertices + self._n_base_edges)
 
     def _rebuild_topology(self):
         """Deprecated alias kept for API compatibility: the full rebuild now
