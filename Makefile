@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace
+.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace bench-kernels
 
 # tier-1 verification (the full suite — unchanged)
 test:
@@ -49,3 +49,8 @@ bench-index:
 # Perfetto), kernel roofline attribution, disabled-telemetry overhead guard
 bench-trace:
 	python -m benchmarks.run --suite trace --fast
+
+# traversal kernel family: host vs jit vs fused-pallas latency ladder,
+# batched point-lookup throughput, per-kernel roofline attribution
+bench-kernels:
+	python -m benchmarks.run --suite kernels

@@ -74,6 +74,18 @@ def _trace_suite(sf: int, fast: bool) -> list[dict]:
     return rows
 
 
+def _kernels_suite(sf: int, fast: bool) -> list[dict]:
+    """Traversal kernel family: single-query latency ladder (host matcher vs
+    per-hop jit vs fused pallas path) over start selectivity, batched
+    point-lookup throughput (launch amortization across >=64 concurrent
+    queries), and achieved-vs-roof bandwidth of the DeviceMatchPattern
+    kernel spans from the engine's fenced trace export."""
+    from . import traversal_bench
+    rows = traversal_bench.run_suite(sf=sf, fast=fast)
+    traversal_bench.print_rows(rows)
+    return rows
+
+
 def _save(all_rows: list[dict]) -> None:
     """Merge into experiments/bench_results.json: rows of the tables just
     measured replace their previous records; other suites' rows persist."""
@@ -100,7 +112,7 @@ def main() -> None:
                     help="skip the scale-factor sweep / use smoke sizes")
     ap.add_argument("--suite",
                     choices=("paper", "update", "gcdia", "optimizer",
-                             "index", "trace", "all"),
+                             "index", "trace", "kernels", "all"),
                     default="paper",
                     help="paper: GCDI/GCDA tables; update: write-path "
                          "throughput (delta store vs full rebuild); gcdia: "
@@ -109,7 +121,9 @@ def main() -> None:
                          "cost-based rewritten DAG latency; index: "
                          "secondary-index access paths vs full scans; "
                          "trace: telemetry smoke — traced GCDIA with "
-                         "Chrome-trace export + disabled-overhead guard")
+                         "Chrome-trace export + disabled-overhead guard; "
+                         "kernels: traversal kernel family — latency "
+                         "ladder, batched point lookups, kernel roofline")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -133,6 +147,12 @@ def main() -> None:
     if args.suite in ("trace", "all"):
         all_rows += _trace_suite(sf=args.sf, fast=args.fast)
         if args.suite == "trace":
+            _save(all_rows)
+            return
+
+    if args.suite in ("kernels", "all"):
+        all_rows += _kernels_suite(sf=args.sf, fast=args.fast)
+        if args.suite == "kernels":
             _save(all_rows)
             return
 

@@ -48,6 +48,31 @@ def cost_pattern(n_push_v: int, n_push_e: int, n_vertices: int, n_edges: int,
     return cost_algo2 + cost_prop
 
 
+COST_LAUNCH = 5000.0   # fixed dispatch + host<->device sync per launch window
+DEVICE_LANES = 8.0     # vector-lane speedup of device frontier expansion
+
+
+def cost_device_match(n_push_v: int, n_push_e: int, n_vertices: int,
+                      n_edges: int, est_frontier: float, hops: int,
+                      avg_deg: float, est_result: float, n_deferred: int, *,
+                      zone_frac: float = 1.0,
+                      per_hop_sync: bool = False) -> float:
+    """Device-resident pattern match (DeviceMatchPattern). Differs from
+    ``cost_pattern`` in three ways: vertex predicate tables are pure columnar
+    scans (no per-record fetch), edge predicate tables read only the
+    zone-candidate fraction of the edge column (the kernel's prefetch filter
+    skips dead chunks), and the per-record traversal work runs at vector
+    width. In exchange every launch window pays a fixed dispatch+sync
+    charge — per hop for the jit matcher (it syncs on the overflow flag each
+    hop), once for the fused chain (one end-of-chain sync)."""
+    tables = (n_push_v * n_vertices * COST_CPU
+              + n_push_e * max(zone_frac, 0.0) * n_edges * (COST_IO + COST_CPU))
+    lam = sum(avg_deg ** (h + 1) for h in range(hops))
+    traverse = est_frontier * lam * COST_CPU / DEVICE_LANES
+    launches = (2.0 * hops) if per_hop_sync else 2.0
+    return tables + traverse + launches * COST_LAUNCH + est_result * n_deferred * COST_CPU
+
+
 def should_push_range(g, tbl, pred) -> bool:
     """Cost-compare pushing a range predicate at the end vertex vs deferring
     it to the graph-relation (Fig. 6 end-vertex rule)."""

@@ -137,6 +137,8 @@ class GredoEngine:
 
         reg.register_source("deltastore", _graph_writes)
         reg.register_source("index", _index_counters)
+        from . import pattern_jit
+        reg.register_source("traversal_kernels", pattern_jit.metrics)
         self.telemetry = tel
         return tel
 
@@ -268,6 +270,13 @@ class GredoEngine:
                                     ("hits", "misses", "bypasses", "evictions")
                                     if k in d))
         lines.append(f"interbuffer: {self.interbuffer.counters()} (cumulative)")
+        tk = {k.split(".", 1)[1]: v
+              for k, v in self.last_registry_delta.items()
+              if k.startswith("traversal_kernels.") and v}
+        if tk:
+            lines.append("traversal kernels (this query): "
+                         + " ".join(f"{k}={v:+g}"
+                                    for k, v in sorted(tk.items())))
         if self.telemetry is not None and self.telemetry.qerror.last_plan:
             lines.append("== q-error flags ==")
             lines += [f"  {m!r}" for m in self.telemetry.qerror.last_plan]

@@ -50,6 +50,9 @@ MAX_DP_RELATIONS = 8     # DP over connected subsets up to this many leaves
 MAX_SIDING_ENUM = 3      # joint 3^k siding enumeration up to k candidates
 MAX_CACHE_ENTRIES = 50_000   # estimate-cache size backstop
 
+DEVICE_MATCH = True              # consider device access paths for patterns
+DEVICE_MAX_FRONTIER = float(1 << 18)   # skip device lowering past this peak
+
 
 @dataclasses.dataclass
 class OptReport:
@@ -265,6 +268,7 @@ def _optimize_gcdi(proj: ph.PhysicalOp, db: Database, report: OptReport,
                                  f"(query order {sorted(order)})")
 
     _annotate_match_access(current, db)
+    current = _select_match_path(current, db, report, cache)
     if residual:
         current = ph.Residual(residual, current)
     return proj.with_children(current)
@@ -409,6 +413,66 @@ def _annotate_match_access(root: ph.PhysicalOp, db: Database) -> None:
                    and idx.serves(pr.op) for pr in ps):
                 served.append(var)
     mp.access = f"index-seed[{','.join(served)}]" if served else "mask-scan"
+
+
+def _select_match_path(root: ph.PhysicalOp, db: Database, report: OptReport,
+                       cache: dict) -> ph.PhysicalOp:
+    """Third access path for pattern matching: cost-compare the host matcher
+    (``pattern.match``) against the device flavors — the fused Pallas chain
+    (zone-filtered predicate tables, one end-of-chain sync) and the per-hop
+    jit matcher — and lower the MatchPattern to a ``DeviceMatchPattern``
+    when a device plan wins. Only mask-free chain patterns on settled
+    (no-pending-delta) graphs qualify; the frontier-size estimate gates out
+    patterns whose padded capacity would not fit the static-shape budget."""
+    if not DEVICE_MATCH:
+        return root
+    mp = _find_kind(root, ph.MatchPattern)
+    if (mp is None or mp.pplan is None or mp.children
+            or not mp.pplan.pattern.edges or not mp.pplan.pattern.is_chain):
+        return root
+    g = db.graphs.get(mp.graph)
+    if g is None or g.delta.has_pending():
+        return root
+    p = mp.pplan
+    pat = p.pattern
+    chain = [pat.vertices[0].var] + [e.dst for e in pat.edges]
+    hop_order = chain[::-1] if p.reverse else chain
+    start = hop_order[0]
+    stbl = g.vertex_tables[pat.vertex(start).label]
+    n_start = float(stbl.nrows)
+    for pr in p.pushed.get(start, []):
+        n_start *= stbl.stats(pr.column).selectivity(pr)
+    # peak padded-frontier estimate across hops (pre-predicate expansion —
+    # the kernel's capacity must hold every candidate before compaction)
+    peak = front = max(n_start, 1.0)
+    for v in hop_order[:-1]:
+        front *= g.hop_expansion(reverse=p.reverse,
+                                 label=pat.vertex(v).label)
+        peak = max(peak, front)
+    if peak > DEVICE_MAX_FRONTIER:
+        report.add("access-path", f"{mp.graph}: pattern stays on host "
+                   f"matcher (est peak frontier {peak:.3g} exceeds device "
+                   f"budget {DEVICE_MAX_FRONTIER:.3g})")
+        return root
+    need = max(int(peak * 2.0), 1)
+    cap = 1 << max(7, (need - 1).bit_length())
+    cost_host = _est_cost(mp, db, cache)
+    best = None
+    for access in ("device-pallas", "device-jit"):
+        dm = ph.DeviceMatchPattern(mp.graph, g.epoch, p, access=access,
+                                   capacity=cap)
+        c = _est_cost(dm, db, cache)
+        if best is None or c < best[0]:
+            best = (c, dm)
+    c, dm = best
+    if c < cost_host:
+        report.add("access-path",
+                   f"{mp.graph}: {dm.access} pattern match, capacity={cap} "
+                   f"(cost {c:.3g} < host {cost_host:.3g})")
+        return _replace(root, {id(mp): dm})
+    report.add("access-path", f"{mp.graph}: pattern stays on host matcher "
+               f"(cost {cost_host:.3g} <= device {c:.3g})")
+    return root
 
 
 def _needed_columns(q, coll: str, residual: list) -> set:

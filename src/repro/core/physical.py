@@ -392,6 +392,60 @@ class MatchPattern(PhysicalOp):
                 f"pushed={pushed} deferred={deferred}]")
 
 
+class DeviceMatchPattern(PhysicalOp):
+    """Mask-free chain match executed on the accelerator — the third access
+    path of the pattern operator, chosen by the optimizer off frontier-size
+    and selectivity estimates. ``access`` selects the flavor:
+    ``device-pallas`` runs the fused traversal kernel family (zone-filtered
+    predicate tables, in-kernel compaction, one launch window per chain);
+    ``device-jit`` runs the per-hop ``DevicePatternMatcher``. Falls back to
+    the host matcher at runtime if the graph has grown pending deltas since
+    planning (the device snapshot reads base CSRs only)."""
+    kind = "DeviceMatchPattern"
+
+    def __init__(self, graph: str, epoch: int, pplan,
+                 access: str = "device-pallas",
+                 capacity: Optional[int] = None):
+        super().__init__()
+        self.graph = graph
+        self.epoch = epoch
+        self.pplan = pplan
+        self.access = access
+        self.capacity = capacity
+        # per-execution analytic flops/bytes; merged into the telemetry span
+        # (this is a DAG leaf — the generic shape-derived kernel_args model
+        # has no inputs to derive from)
+        self.last_kernel_args: Optional[dict] = None
+
+    def params(self):
+        return (self.graph, self.epoch, _pattern_sig(self.pplan.pattern),
+                _pplan_sig(self.pplan), self.access, self.capacity)
+
+    def run(self, ctx, *inputs):
+        from . import pattern_jit
+        g = ctx.db.graphs[self.graph]
+        if g.delta.has_pending():
+            # planned against a compacted snapshot that has since grown
+            # deltas: degrade to the host matcher, don't fail
+            self.access = "host-fallback"
+            return pattern_mod.match(g, self.pplan)
+        flavor = "jit" if self.access == "device-jit" else "pallas"
+        rel, kargs = pattern_jit.device_match(
+            g, self.pplan, flavor=flavor, initial_capacity=self.capacity)
+        self.last_kernel_args = kargs
+        return rel
+
+    def describe(self):
+        p = self.pplan
+        d = "rev" if p.reverse else "fwd"
+        pushed = ",".join(f"{v}:{len(ps)}"
+                          for v, ps in sorted(p.pushed.items())) or "-"
+        cap = f" cap={self.capacity}" if self.capacity else ""
+        return (f"DeviceMatchPattern[{self.graph} dir={d} "
+                f"hops={len(p.pattern.edges)} pushed={pushed} "
+                f"via {self.access}{cap}]")
+
+
 class TableJoinMatch(PhysicalOp):
     """GredoDB-S ablation: the pattern as k-way edge-table equi-joins (the
     TBS strategy §2.2) with deferred predicates evaluated post-hoc."""
@@ -1072,6 +1126,11 @@ def execute(node: PhysicalOp, ctx: ExecContext):
                 node.stats.seconds += sync  # device wait belongs to the op
             args.update(telemetry.kernel_args(node.kind, tuple(inputs), out,
                                               iters=getattr(node, "iters", 1)))
+            extra = getattr(node, "last_kernel_args", None)
+            if extra:
+                # leaf kernels (DeviceMatchPattern) report their own
+                # flops/bytes — the shape-derived model above sees no inputs
+                args.update(extra)
         if node.stats.rows is not None:
             args["rows"] = node.stats.rows
         if node.stats.nbytes:
@@ -1255,6 +1314,54 @@ def estimate(root: PhysicalOp, db: Database,
                 g.n_vertices, g.n_live_edges, n_start, hops,
                 gm_fanout, rows,
                 sum(len(ps) for ps in p.deferred.values()))
+        elif isinstance(n, DeviceMatchPattern):
+            # same cardinality math as MatchPattern (no mask children),
+            # priced with the device cost model: vertex predicate tables are
+            # columnar scans, edge tables read the zone-candidate fraction
+            # only, frontier work runs at vector width, and each launch
+            # window pays a fixed dispatch+sync charge (per hop on the jit
+            # flavor, once on the fused flavor)
+            g = db.graphs[n.graph]
+            p = n.pplan
+            chain = [p.pattern.vertices[0].var] + [e.dst for e in p.pattern.edges]
+            start = chain[-1] if p.reverse else chain[0]
+            stbl = g.vertex_tables[p.pattern.vertex(start).label]
+            n_start = stbl.nrows * sel(stbl, p.pushed.get(start, []))
+            hops = len(p.pattern.edges)
+            hop_order = chain[::-1] if p.reverse else chain
+            fanouts = [g.hop_expansion(reverse=p.reverse,
+                                       label=p.pattern.vertex(v).label)
+                       for v in hop_order[:-1]]
+            expansion = float(np.prod(fanouts)) if fanouts else 1.0
+            end_sel = 1.0
+            edge_vset = {e.var for e in p.pattern.edges}
+            for var, ps in p.pushed.items():
+                if var == start:
+                    continue
+                vtbl = (g.edges if var in edge_vset
+                        else g.vertex_tables[p.pattern.vertex(var).label])
+                end_sel *= sel(vtbl, ps)
+            rows = n_start * expansion * end_sel
+            gm_fanout = expansion ** (1.0 / hops) if hops else 0.0
+            zf = 1.0
+            im = getattr(db, "_index_manager", None)
+            if im is not None and n.access != "device-jit":
+                for var, ps in p.pushed.items():
+                    if var not in edge_vset:
+                        continue
+                    for pr in ps:
+                        f = im.zone_fraction(n.graph, pr)
+                        if f is not None:
+                            zf = min(zf, f)
+            cost = cost_mod.cost_device_match(
+                sum(len(ps) for v, ps in p.pushed.items()
+                    if v not in edge_vset),
+                sum(len(ps) for v, ps in p.pushed.items()
+                    if v in edge_vset),
+                g.n_vertices, g.n_live_edges, n_start, hops,
+                gm_fanout, rows,
+                sum(len(ps) for ps in p.deferred.values()),
+                zone_frac=zf, per_hop_sync=(n.access == "device-jit"))
         elif isinstance(n, TableJoinMatch):
             g = db.graphs[n.graph]
             hops = len(n.pattern.edges)

@@ -539,7 +539,7 @@ class QErrorMonitor:
 # ---------------------------------------------------------------------------
 
 GCDA_KINDS = ("Rel2Matrix", "RandomAccessMatrix", "MatMul", "Similarity",
-              "Regression", "Const")
+              "Regression", "Const", "DeviceMatchPattern")
 
 
 def fence(value) -> float:

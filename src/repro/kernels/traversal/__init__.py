@@ -1,0 +1,13 @@
+"""Fused traversal kernel family (device-resident GCDI): CSR row-gather +
+neighbor expansion + predicate evaluation + in-kernel compaction in one
+launch, with a batched multi-query variant. Layout per the family
+convention: traversal.py (pl.pallas_call + BlockSpec), ops.py (dispatch +
+whole-chain drivers), ref.py (pure-jnp oracle)."""
+from .ops import (COUNTERS, batched_hop, batched_traverse, fused_hop,
+                  traverse_chain)
+from .ref import batched_hop_ref, fused_hop_ref
+
+__all__ = [
+    "fused_hop", "batched_hop", "traverse_chain", "batched_traverse",
+    "fused_hop_ref", "batched_hop_ref", "COUNTERS",
+]

@@ -1,0 +1,230 @@
+"""Dispatch + whole-chain drivers for the fused traversal kernels.
+
+``fused_hop``/``batched_hop`` follow the family convention: the Pallas
+kernel on TPU, the jnp oracle on CPU (interpret-mode Pallas is for
+validation, not speed), ``use_kernel`` to force either.
+
+``traverse_chain``/``batched_traverse`` run a whole chain pattern as ONE
+jit'd program — every hop's expansion, predicate evaluation, compaction and
+path re-join stays on device, and the host synchronizes once at the end
+(overflow flag + final count). That is the latency contrast with the
+per-hop ``DevicePatternMatcher``, which dispatches and syncs every hop.
+
+COUNTERS feed the telemetry registry through
+``core.pattern_jit.metrics`` (cumulative — per-query deltas come from
+registry snapshots).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from . import traversal as kern
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass
+class _Counters:
+    launches: int = 0           # chain launches (one per traverse_chain call)
+    hops: int = 0               # fused hops executed
+    batched_queries: int = 0    # queries carried by batched launches
+    chunks_alive: int = 0       # zone-map chunks surviving the prefetch filter
+    chunks_total: int = 0       # zone-map chunks examined
+
+    def metrics(self) -> dict:
+        return {"launches": self.launches, "hops": self.hops,
+                "batched_queries": self.batched_queries,
+                "chunks_alive": self.chunks_alive,
+                "chunks_total": self.chunks_total}
+
+    def reset(self) -> None:
+        self.launches = self.hops = self.batched_queries = 0
+        self.chunks_alive = self.chunks_total = 0
+
+
+COUNTERS = _Counters()
+
+
+def fused_hop(row_ptr, col_idx, edge_id, frontier, fmask, member, edge_pred,
+              chunk_alive, *, capacity: int, chunk: int,
+              use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _ON_TPU  # interpret-mode Pallas is for validation, not speed
+    if not use_kernel:
+        return ref.fused_hop_ref(row_ptr, col_idx, edge_id, frontier, fmask,
+                                 member, edge_pred, chunk_alive,
+                                 capacity=capacity, chunk=chunk)
+    return kern.fused_hop(row_ptr, col_idx, edge_id, frontier, fmask, member,
+                          edge_pred, chunk_alive, capacity=capacity,
+                          chunk=chunk, interpret=not _ON_TPU)
+
+
+def batched_hop(row_ptr, col_idx, edge_id, frontiers, fmasks, member,
+                edge_pred, chunk_alive, *, capacity: int, chunk: int,
+                use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _ON_TPU
+    if not use_kernel:
+        return ref.batched_hop_ref(row_ptr, col_idx, edge_id, frontiers,
+                                   fmasks, member, edge_pred, chunk_alive,
+                                   capacity=capacity, chunk=chunk)
+    return kern.batched_hop(row_ptr, col_idx, edge_id, frontiers, fmasks,
+                            member, edge_pred, chunk_alive, capacity=capacity,
+                            chunk=chunk, interpret=not _ON_TPU)
+
+
+# ---------------------------------------------------------------------------
+# Whole-chain drivers (single launch window, one end-of-chain host sync)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "chunk", "use_kernel",
+                                    "interpret"))
+def _chain_device(row_ptr, col_idx, edge_id, frontier, fmask, members,
+                  edge_preds, chunk_alives, *, capacity: int, chunk: int,
+                  use_kernel: bool, interpret: bool):
+    if use_kernel:
+        hop = functools.partial(kern.fused_hop, interpret=interpret)
+    else:
+        hop = ref.fused_hop_ref
+    vcols = [frontier.astype(jnp.int32)]
+    ecols: list = []
+    count = jnp.sum(fmask).astype(jnp.int32)
+    ovf = jnp.zeros((), bool)
+    for vm, ep, ca in zip(members, edge_preds, chunk_alives):
+        src, dst, eid, count, o = hop(row_ptr, col_idx, edge_id, frontier,
+                                      fmask, vm, ep, ca, capacity=capacity,
+                                      chunk=chunk)
+        # re-join path prefixes through the compacted src slots
+        vcols = [c[src] for c in vcols]
+        ecols = [c[src] for c in ecols]
+        vcols.append(dst)
+        ecols.append(eid)
+        frontier = jnp.maximum(dst, 0)
+        fmask = jnp.arange(capacity, dtype=jnp.int32) < count
+        ovf |= o
+    return vcols, ecols, count, ovf
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "chunk", "use_kernel",
+                                    "interpret"))
+def _batched_chain_device(row_ptr, col_idx, edge_id, frontiers, fmasks,
+                          members, edge_preds, chunk_alives, *, capacity: int,
+                          chunk: int, use_kernel: bool, interpret: bool):
+    if use_kernel:
+        hop = functools.partial(kern.batched_hop, interpret=interpret)
+    else:
+        hop = ref.batched_hop_ref
+    B = frontiers.shape[0]
+    vcols = [frontiers.astype(jnp.int32)]
+    ecols: list = []
+    counts = jnp.sum(fmasks, axis=1).astype(jnp.int32)
+    ovf = jnp.zeros((B,), bool)
+    for vm, ep, ca in zip(members, edge_preds, chunk_alives):
+        src, dst, eid, counts, o = hop(row_ptr, col_idx, edge_id, frontiers,
+                                       fmasks, vm, ep, ca, capacity=capacity,
+                                       chunk=chunk)
+        vcols = [jnp.take_along_axis(c, src, axis=1) for c in vcols]
+        ecols = [jnp.take_along_axis(c, src, axis=1) for c in ecols]
+        vcols.append(dst)
+        ecols.append(eid)
+        frontiers = jnp.maximum(dst, 0)
+        fmasks = (jnp.arange(capacity, dtype=jnp.int32)[None, :]
+                  < counts[:, None])
+        ovf |= o
+    return vcols, ecols, counts, ovf
+
+
+def _device_tables(n_vertices, n_edges, chunk, members, edge_preds,
+                   chunk_alives):
+    """Normalize optional host tables to device arrays (None = all-true)."""
+    m = max(int(n_edges), 1)
+    nch = max(-(-m // chunk), 1)
+    ones_v = jnp.ones((max(int(n_vertices), 1),), bool)
+    ones_e = jnp.ones((m,), bool)
+    ones_c = jnp.ones((nch,), bool)
+    mem = tuple(ones_v if v is None else jnp.asarray(v) for v in members)
+    epr = tuple(ones_e if e is None else jnp.asarray(e) for e in edge_preds)
+    cal = tuple(ones_c if c is None else jnp.asarray(c) for c in chunk_alives)
+    return mem, epr, cal
+
+
+def _padded_csr(row_ptr, col_idx, edge_id, n_edges):
+    rp = jnp.asarray(row_ptr)
+    if n_edges:
+        return rp, jnp.asarray(col_idx), jnp.asarray(edge_id)
+    # degenerate graph: 1-entry dummies keep every gather in range (deg is
+    # all zero, so no candidate is ever valid)
+    return rp, jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32)
+
+
+def traverse_chain(row_ptr, col_idx, edge_id, n_vertices: int, n_edges: int,
+                   start_nids, members, edge_preds, chunk_alives, *,
+                   capacity: int, chunk: int, use_kernel: bool | None = None):
+    """Run a whole chain in one jit'd program. ``members[h]`` /
+    ``edge_preds[h]`` / ``chunk_alives[h]`` are per-hop tables (None =
+    unconstrained). Returns (vcols, ecols, ok): trimmed np arrays of the
+    matched path columns (hop order), or ``ok=False`` on capacity overflow
+    (caller doubles and retries)."""
+    if use_kernel is None:
+        use_kernel = _ON_TPU
+    rp, ci, ei = _padded_csr(row_ptr, col_idx, edge_id, n_edges)
+    mem, epr, cal = _device_tables(n_vertices, n_edges, chunk, members,
+                                   edge_preds, chunk_alives)
+    C0 = len(start_nids)
+    if capacity < C0 or capacity % 128:
+        raise ValueError(f"capacity {capacity} must be a multiple of 128 "
+                         f">= the start frontier ({C0})")
+    frontier = jnp.zeros((capacity,), jnp.int32).at[:C0].set(
+        jnp.asarray(start_nids, jnp.int32))
+    fmask = jnp.zeros((capacity,), bool).at[:C0].set(True)
+    vcols, ecols, count, ovf = _chain_device(
+        rp, ci, ei, frontier, fmask, mem, epr, cal, capacity=capacity,
+        chunk=chunk, use_kernel=bool(use_kernel), interpret=not _ON_TPU)
+    COUNTERS.launches += 1
+    COUNTERS.hops += len(mem)
+    if bool(ovf):               # the chain's one host sync
+        return None, None, False
+    k = int(count)
+    return ([np.asarray(c)[:k] for c in vcols],
+            [np.asarray(c)[:k] for c in ecols], True)
+
+
+def batched_traverse(row_ptr, col_idx, edge_id, n_vertices: int,
+                     n_edges: int, start_nids, members, edge_preds,
+                     chunk_alives, *, capacity: int, chunk: int,
+                     use_kernel: bool | None = None):
+    """Point-lookup batching: ``start_nids`` is (B,) — one start vertex per
+    query; all B queries advance through the chain in single launches.
+    Returns (vcols, ecols, counts, ok): per-query path columns as
+    (B, capacity) np arrays valid up to ``counts[q]``, or ``ok=False`` if
+    any query overflowed."""
+    if use_kernel is None:
+        use_kernel = _ON_TPU
+    rp, ci, ei = _padded_csr(row_ptr, col_idx, edge_id, n_edges)
+    mem, epr, cal = _device_tables(n_vertices, n_edges, chunk, members,
+                                   edge_preds, chunk_alives)
+    start = jnp.asarray(start_nids, jnp.int32)
+    B = start.shape[0]
+    if capacity % 128:
+        raise ValueError(f"capacity {capacity} must be a multiple of 128")
+    frontiers = jnp.zeros((B, capacity), jnp.int32).at[:, 0].set(start)
+    fmasks = jnp.zeros((B, capacity), bool).at[:, 0].set(True)
+    vcols, ecols, counts, ovf = _batched_chain_device(
+        rp, ci, ei, frontiers, fmasks, mem, epr, cal, capacity=capacity,
+        chunk=chunk, use_kernel=bool(use_kernel), interpret=not _ON_TPU)
+    COUNTERS.launches += 1
+    COUNTERS.hops += len(mem)
+    COUNTERS.batched_queries += int(B)
+    if bool(jnp.any(ovf)):      # the batch's one host sync
+        return None, None, None, False
+    return ([np.asarray(c) for c in vcols], [np.asarray(c) for c in ecols],
+            np.asarray(counts), True)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the fused traversal hop (DeviceMatchPattern).
+
+One "fused hop" is the unit the Pallas kernel implements: CSR row-gather +
+neighbor expansion + pushed-predicate evaluation + compaction, over a padded
+fixed-capacity frontier. The oracle keeps the exact output contract the
+kernel must hit so the equivalence tests compare arrays, not row sets:
+
+  * candidates are laid out in slot order — frontier-slot-major, CSR
+    position within a row (the same order the host matcher produces);
+  * survivors are compacted to the front, preserving slot order;
+  * padding is ``src=0, dst=-1, eid=-1`` beyond ``count``;
+  * ``overflowed`` is true when the *pre-predicate* candidate total exceeds
+    the capacity (the caller doubles and retries — survivors of a truncated
+    expansion are never silently returned as complete).
+
+``chunk_alive`` is the zone-map chunk survivor table over the edge-tid
+space: a candidate whose edge lands in a predicate-dead chunk is dropped
+without consulting ``edge_pred`` (on TPU the dead chunk's slice of the
+predicate table is never DMA'd; here the gather is simply masked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "chunk"))
+def fused_hop_ref(row_ptr: jax.Array, col_idx: jax.Array, edge_id: jax.Array,
+                  frontier: jax.Array, fmask: jax.Array, member: jax.Array,
+                  edge_pred: jax.Array, chunk_alive: jax.Array, *,
+                  capacity: int, chunk: int):
+    """One fused hop. frontier/fmask: (C,) padded nids + validity; member:
+    (n,) bool over nids; edge_pred: (m,) bool over edge tids; chunk_alive:
+    (ceil(m/chunk),) bool. Returns (src_slot, dst, eid, count, overflowed)
+    with the first ``count`` slots holding the compacted survivors —
+    ``src_slot`` indexes the INPUT frontier so callers re-join path
+    prefixes."""
+    C = frontier.shape[0]
+    fr = frontier.astype(jnp.int32)
+    deg = jnp.where(fmask, (row_ptr[fr + 1] - row_ptr[fr]).astype(jnp.int32), 0)
+    out_off = jnp.cumsum(deg) - deg                     # exclusive prefix sum
+    total = jnp.sum(deg)
+    overflowed = total > capacity
+
+    slots = jnp.arange(capacity, dtype=jnp.int32)
+    src_slot = jnp.clip(
+        jnp.searchsorted(out_off, slots, side="right") - 1, 0, C - 1
+    ).astype(jnp.int32)
+    within = slots - out_off[src_slot]
+    pos = jnp.clip(row_ptr[fr[src_slot]] + within, 0, col_idx.shape[0] - 1)
+    dst = col_idx[pos].astype(jnp.int32)
+    eid = edge_id[pos].astype(jnp.int32)
+
+    ok = slots < jnp.minimum(total, capacity)
+    ok &= member[jnp.clip(dst, 0, member.shape[0] - 1)]
+    ok &= chunk_alive[jnp.clip(eid // chunk, 0, chunk_alive.shape[0] - 1)]
+    ok &= edge_pred[jnp.clip(eid, 0, edge_pred.shape[0] - 1)]
+
+    # stable compaction in slot order: survivors sort before dead slots and
+    # keep their relative order (keys are unique, so no stable-sort caveat)
+    count = jnp.sum(ok).astype(jnp.int32)
+    order = jnp.argsort(jnp.where(ok, slots, capacity + slots))
+    live = slots < count
+    src_c = jnp.where(live, src_slot[order], 0)
+    dst_c = jnp.where(live, dst[order], -1)
+    eid_c = jnp.where(live, eid[order], -1)
+    return src_c, dst_c, eid_c, count, overflowed
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "chunk"))
+def batched_hop_ref(row_ptr: jax.Array, col_idx: jax.Array,
+                    edge_id: jax.Array, frontiers: jax.Array,
+                    fmasks: jax.Array, member: jax.Array,
+                    edge_pred: jax.Array, chunk_alive: jax.Array, *,
+                    capacity: int, chunk: int):
+    """Batched variant: frontiers/fmasks are (B, C) — B independent queries
+    share the CSR and predicate tables and advance in one call. Returns the
+    per-query (src_slot, dst, eid) as (B, capacity), count as (B,), and a
+    per-query overflow flag."""
+    def one(fr, fm):
+        return fused_hop_ref(row_ptr, col_idx, edge_id, fr, fm, member,
+                             edge_pred, chunk_alive,
+                             capacity=capacity, chunk=chunk)
+    return jax.vmap(one)(frontiers, fmasks)
