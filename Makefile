@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace bench-kernels
+.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace bench-kernels bench-shard
 
 # tier-1 verification (the full suite — unchanged)
 test:
@@ -54,3 +54,10 @@ bench-trace:
 # batched point-lookup throughput, per-kernel roofline attribution
 bench-kernels:
 	python -m benchmarks.run --suite kernels
+
+# sharded morsel-parallel execution: single-stream vs 4-shard cold latency
+# on the scan/join-heavy GCDIA (bit-for-bit checked), the born-sharded
+# Rel2Matrix handoff assertion, and the small-input serial cost gate
+# (--sf 200: the scans dominate the fixed executor overhead there)
+bench-shard:
+	python -m benchmarks.run --suite shard --sf 200

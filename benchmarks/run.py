@@ -86,6 +86,17 @@ def _kernels_suite(sf: int, fast: bool) -> list[dict]:
     return rows
 
 
+def _shard_suite(sf: int, fast: bool) -> list[dict]:
+    """Sharded morsel-parallel execution: single-stream vs 4-shard cold
+    end-to-end latency on the scan/join-heavy GCDIA (bit-for-bit checked
+    first), the born-sharded Rel2Matrix span assertion, and the small-input
+    cost gate (4 shards requested, serial chosen, <=5% overhead)."""
+    from . import shard_bench
+    rows = shard_bench.run_suite(sf=sf, fast=fast)
+    shard_bench.print_rows(rows)
+    return rows
+
+
 def _save(all_rows: list[dict]) -> None:
     """Merge into experiments/bench_results.json: rows of the tables just
     measured replace their previous records; other suites' rows persist."""
@@ -112,7 +123,7 @@ def main() -> None:
                     help="skip the scale-factor sweep / use smoke sizes")
     ap.add_argument("--suite",
                     choices=("paper", "update", "gcdia", "optimizer",
-                             "index", "trace", "kernels", "all"),
+                             "index", "trace", "kernels", "shard", "all"),
                     default="paper",
                     help="paper: GCDI/GCDA tables; update: write-path "
                          "throughput (delta store vs full rebuild); gcdia: "
@@ -123,7 +134,10 @@ def main() -> None:
                          "trace: telemetry smoke — traced GCDIA with "
                          "Chrome-trace export + disabled-overhead guard; "
                          "kernels: traversal kernel family — latency "
-                         "ladder, batched point lookups, kernel roofline")
+                         "ladder, batched point lookups, kernel roofline; "
+                         "shard: morsel-parallel execution — single-stream "
+                         "vs 4-shard latency, born-sharded GCDA handoff, "
+                         "small-input serial gate")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -153,6 +167,12 @@ def main() -> None:
     if args.suite in ("kernels", "all"):
         all_rows += _kernels_suite(sf=args.sf, fast=args.fast)
         if args.suite == "kernels":
+            _save(all_rows)
+            return
+
+    if args.suite in ("shard", "all"):
+        all_rows += _shard_suite(sf=args.sf, fast=args.fast)
+        if args.suite == "shard":
             _save(all_rows)
             return
 

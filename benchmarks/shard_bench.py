@@ -1,0 +1,185 @@
+"""Sharded morsel-parallel execution benchmark (acceptance for the
+sharding PR).
+
+Three parts:
+
+* ``shard_speedup`` — the scan/join-heavy GCDIA (``a_shard_reg``: two
+  selective scans ⋈ on ``customer_id`` → Rel2Matrix → logistic
+  regression) on one m2bench database at ``--sf`` (the target is
+  sf >= 200), single-stream
+  engine vs. ``n_shards=4``. Each repetition constructs a fresh engine so
+  neither side gets inter-buffer or exchange-cache reuse: the number is
+  the honest cold end-to-end latency. The sharded and serial relations
+  are compared bit-for-bit before any timing is trusted.
+* ``shard_born`` — one traced 4-shard run; asserts the Rel2Matrix span
+  metadata carries ``born_sharded=True, host_gather=False``, i.e. the
+  generated matrix reached the GCDA kernel without a host gather.
+* ``shard_serial_gate`` — a small input (sf=1) with ``n_shards=4``
+  requested: the cost model must choose the single-stream plan
+  (``last_shard_count == 1``) and the median latency must stay within 5%
+  of an engine that never heard of sharding.
+
+Usage: PYTHONPATH=src python -m benchmarks.run --suite shard [--sf 200]
+"""
+from __future__ import annotations
+
+import statistics
+import sys
+import time
+
+import numpy as np
+
+from repro.core import cost
+from repro.core.engine import GredoEngine
+from repro.data import m2bench
+
+
+# gradient-descent iterations for the timed GCDIA: enough to exercise the
+# device handoff, small enough that the integration data path (the subject
+# of this suite) dominates the fixed device compute both sides share
+GD_ITERS = 8
+
+
+def _col_vals(t, name):
+    c = t.columns[name]
+    return c.decode(c.codes) if hasattr(c, "decode") else np.asarray(c)
+
+
+def _assert_same_relation(a, b) -> int:
+    assert list(a.columns) == list(b.columns)
+    assert a.nrows == b.nrows
+    for name in a.columns:
+        assert np.array_equal(_col_vals(a, name), _col_vals(b, name)), (
+            f"sharded relation diverged on {name}")
+    return a.nrows
+
+
+def _time_pair(db, mode: str, run, repeat: int) -> tuple[float, float]:
+    """Best-of cold latency, serial vs 4-shard: a fresh engine per
+    repetition (no inter-buffer hits, no exchange-cache reuse — both sides
+    pay their full pipeline) and the two sides interleaved within each
+    repetition so neither gets a cleaner allocator/page-cache state than
+    the other. Returns ``(serial_s, sharded_s)``."""
+    import gc
+    best = {1: float("inf"), 4: float("inf")}
+    for _ in range(repeat):
+        for n_shards in (1, 4):
+            gc.collect()
+            eng = GredoEngine(db, mode=mode, n_shards=n_shards)
+            t0 = time.perf_counter()
+            run(eng)
+            best[n_shards] = min(best[n_shards], time.perf_counter() - t0)
+            del eng
+    return best[1], best[4]
+
+
+def shard_speedup(sf: int, repeat: int = 3) -> list[dict]:
+    db = m2bench.generate(sf=sf)
+    q = m2bench.q_shard_join()
+    task = m2bench.a_shard_reg()
+
+    import jax
+
+    # correctness anchor before timing: identical rows, identical weights
+    serial_eng = GredoEngine(db, mode="gredo")
+    shard_eng = GredoEngine(db, mode="gredo", n_shards=4)
+    rows = _assert_same_relation(serial_eng.query(q), shard_eng.query(q))
+    g0 = np.asarray(GredoEngine(db, mode="gredo").analyze(task, iters=GD_ITERS))
+    g1 = np.asarray(GredoEngine(db, mode="gredo",
+                                n_shards=4).analyze(task, iters=GD_ITERS))
+    assert np.array_equal(g0, g1), "sharded regression weights diverged"
+    k_eff = shard_eng.last_shard_count
+
+    # analyze() returns an async device array — block so the timed section
+    # covers the GCDA compute, not just host-side dispatch
+    out = []
+    for name, run in (
+            ("gcdi_join", lambda e: e.query(q)),
+            ("gcdia_reg",
+             lambda e: jax.block_until_ready(e.analyze(task,
+                                                       iters=GD_ITERS)))):
+        s1, s4 = _time_pair(db, "gredo", run, repeat)
+        out.append({
+            "table": "shard_speedup", "sf": sf, "workload": name,
+            "rows": int(rows), "k": int(k_eff),
+            "serial_s": s1, "sharded_s": s4, "speedup": s1 / s4,
+        })
+    return out
+
+
+def born_sharded_check(sf: int) -> list[dict]:
+    db = m2bench.generate(sf=max(sf // 4, 1))
+    saved = cost.SHARD_MIN_ROWS
+    cost.SHARD_MIN_ROWS = 0      # force sharding even on the reduced input
+    try:
+        eng = GredoEngine(db, mode="gredo", n_shards=4, telemetry=True)
+        eng.analyze(m2bench.a_shard_reg())
+        spans = [s for s in eng.telemetry.collector.last().spans
+                 if s.name == "Rel2Matrix"]
+        assert spans, "no Rel2Matrix span in the traced run"
+        args = spans[0].args
+        assert args.get("born_sharded") is True, args
+        assert args.get("host_gather") is False, args
+        return [{"table": "shard_born", "sf": sf,
+                 "shards": args.get("shards"),
+                 "sharding": args.get("sharding"),
+                 "born_sharded": True, "host_gather": False}]
+    finally:
+        cost.SHARD_MIN_ROWS = saved
+
+
+def serial_gate(repeat: int = 15) -> list[dict]:
+    """sf=1 is far below ``cost.SHARD_MIN_ROWS``: an engine asked for 4
+    shards must cost-choose the single-stream plan and pay (almost)
+    nothing for having asked."""
+    db = m2bench.generate(sf=1)
+    q = m2bench.q_shard_join()
+
+    def median_lat(n_shards: int) -> float:
+        eng = GredoEngine(db, mode="gredo", n_shards=n_shards)
+        eng.query(q)                       # warm (stats, dictionaries)
+        lat = []
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            eng.query(q)
+            lat.append(time.perf_counter() - t0)
+        return statistics.median(lat)
+
+    base = median_lat(1)
+    gated = median_lat(4)
+    eng = GredoEngine(db, mode="gredo", n_shards=4)
+    eng.query(q)
+    assert eng.last_shard_count == 1, "cost gate failed to choose serial"
+    return [{"table": "shard_serial_gate", "sf": 1,
+             "chosen_k": int(eng.last_shard_count),
+             "serial_s": base, "gated_s": gated,
+             "overhead": gated / base - 1.0}]
+
+
+def run_suite(sf: int = 200, fast: bool = False) -> list[dict]:
+    if fast:
+        sf = min(sf, 40)
+    rows = shard_speedup(sf=sf, repeat=2 if fast else 4)
+    rows += born_sharded_check(sf=sf)
+    rows += serial_gate(repeat=9 if fast else 15)
+    return rows
+
+
+def print_rows(rows: list[dict]) -> None:
+    for r in rows:
+        if r["table"] == "shard_speedup":
+            print(f"shard_{r['workload']}_sf{r['sf']},"
+                  f"{r['sharded_s']*1e6:.1f},"
+                  f"speedup_vs_serial={r['speedup']:.2f};k={r['k']};"
+                  f"rows={r['rows']}")
+        elif r["table"] == "shard_born":
+            print(f"shard_born_sf{r['sf']},0.0,"
+                  f"born_sharded={r['born_sharded']};"
+                  f"host_gather={r['host_gather']};shards={r['shards']}")
+        elif r["table"] == "shard_serial_gate":
+            print(f"shard_serial_gate_sf1,{r['gated_s']*1e6:.1f},"
+                  f"chosen_k={r['chosen_k']};"
+                  f"overhead_vs_serial={r['overhead']*100:.1f}%")
+            if r["overhead"] > 0.05:
+                print(f"#   WARNING: gate overhead {r['overhead']*100:.1f}% "
+                      f"exceeds the 5% budget", file=sys.stderr)

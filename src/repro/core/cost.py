@@ -170,3 +170,53 @@ def cost_join(n_left: int, n_right: int, in_memory: bool = True) -> float:
 def cost_join_nested(n_left: int, n_right: int) -> float:
     """Eq. 14 literal (nested loop) — used by the volcano baseline."""
     return n_left * n_right * COST_CPU
+
+
+# ---- sharded execution costs (morsel-parallel operator DAG) -----------------
+
+MORSEL_ROWS = 262144        # probe-side rows per morsel (large: amortizes
+                            # per-morsel dispatch; fits L2-ish working sets)
+SHARD_MIN_ROWS = 100000     # below this dominant input, serial execution wins
+SHARD_OVERHEAD = 2000.0     # fixed per-shard setup (task dispatch, slicing)
+
+
+def cost_exchange(n: float, k: int) -> float:
+    """Partition-exchange: hash every key (one lane op), one stable counting
+    sort into k runs (two passes over the rows), then a per-shard key sort.
+    Co-partitioned inputs (cached partitions at the same epoch) skip this
+    entirely — the cost the executor's exchange cache saves."""
+    n = max(float(n), 1.0)
+    per_shard = n / max(k, 1)
+    return (3.0 * n + k * per_shard * np.log2(max(per_shard, 2.0))) * COST_CPU
+
+
+def cost_sharded_scan(n: float, n_preds: int, k: int) -> float:
+    """Fused per-shard filter: predicate masks are ANDed per shard and rows
+    are gathered once, instead of one full ``take`` per predicate — the
+    row-movement term drops from ``n_preds`` gathers to one."""
+    n = max(float(n), 0.0)
+    return (n * max(n_preds, 1) * COST_CPU     # mask evaluation
+            + n * COST_IO                       # single gather
+            + k * SHARD_OVERHEAD)
+
+
+def cost_sharded_join(n_left: float, n_right: float, k: int) -> float:
+    """Hash-sharded sort-merge join: the build side pays the exchange + one
+    per-shard key sort; each probe morsel binary-searches its shard only
+    (log of the per-shard run, not of the whole build side)."""
+    nl, nr = max(float(n_left), 1.0), max(float(n_right), 1.0)
+    per_shard = nr / max(k, 1)
+    probe = nl * (1.0 + np.log2(max(per_shard, 2.0))) * COST_CPU
+    return cost_exchange(nr, k) + probe + k * SHARD_OVERHEAD
+
+
+def choose_shard_count(dominant_rows: float, k_requested: int) -> int:
+    """Cost-based shard-count choice: serial (k=1) when the dominant input
+    is too small for the per-shard setup + exchange to pay off. The
+    crossover is where the sharded join/scan costs (above) undercut the
+    serial ``cost_join``/``cost_scan`` — in practice a fixed floor, since
+    both models scale linearly past it."""
+    k = max(int(k_requested), 1)
+    if k == 1 or dominant_rows < SHARD_MIN_ROWS:
+        return 1
+    return k

@@ -210,6 +210,21 @@ class EdgeSegment:
         pos, slots = expand_runs(lo, hi - lo)
         return pos, val[slots], eid[slots]
 
+    def range_view(self, lo: int, hi: int, reverse: bool = False
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Zero-copy sub-run of edges whose (source, or target when
+        ``reverse``) nid lies in ``[lo, hi)`` — the per-partition view of
+        this delta segment. Both sort orders are precomputed, so a
+        partition's slice is two binary searches; returns
+        ``(key, other_endpoint, eid)`` views into the sorted run."""
+        if reverse:
+            key, val, eid = self.dst_key, self.dst_src, self.dst_eid
+        else:
+            key, val, eid = self.src_key, self.src_dst, self.src_eid
+        a = int(np.searchsorted(key, lo, side="left"))
+        b = int(np.searchsorted(key, hi, side="left"))
+        return key[a:b], val[a:b], eid[a:b]
+
 
 # ---------------------------------------------------------------------------
 # The per-graph delta store

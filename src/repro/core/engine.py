@@ -81,11 +81,19 @@ class GredoEngine:
                  enable_optimizer: bool = True,
                  admit_cost_per_byte: float = 0.05,
                  join_enum: str = "dp",
-                 telemetry: "bool | telemetry_mod.Telemetry | None" = None):
+                 telemetry: "bool | telemetry_mod.Telemetry | None" = None,
+                 n_shards: int = 1):
         assert mode in ("gredo", "dual", "single")
         assert join_enum in ("dp", "dp-leftdeep", "greedy")
         self.db = db
         self.mode = mode
+        # morsel-parallel sharded execution (repro.core.shard). n_shards is
+        # the *requested* shard count; the §6.3 sharded cost model may still
+        # choose serial execution per query (small dominant inputs) — the
+        # actual per-query choice lands in ``last_shard_count``.
+        self.n_shards = max(int(n_shards), 1)
+        self._shard_runtime = None
+        self.last_shard_count = 1
         self.enable_optimizer = enable_optimizer
         self.join_enum = join_enum
         self.interbuffer = InterBuffer(interbuffer_bytes,
@@ -139,6 +147,12 @@ class GredoEngine:
         reg.register_source("index", _index_counters)
         from . import pattern_jit
         reg.register_source("traversal_kernels", pattern_jit.metrics)
+
+        def _shard_metrics() -> dict:
+            rt = self._shard_runtime
+            return rt.metrics() if rt is not None else {}
+
+        reg.register_source("shard", _shard_metrics)
         self.telemetry = tel
         return tel
 
@@ -201,6 +215,23 @@ class GredoEngine:
                                           join_enum=self.join_enum)
         return dag, None
 
+    def _shard_plan(self, dag: physical.PhysicalOp
+                    ) -> tuple[physical.PhysicalOp, Optional[object]]:
+        """Rewrite the post-optimizer DAG for morsel-parallel execution when
+        ``n_shards > 1`` *and* the sharded cost model picks k > 1 for this
+        query's dominant input. Returns ``(dag, shard_runtime-or-None)``."""
+        self.last_shard_count = 1
+        if self.n_shards <= 1:
+            return dag, None
+        from . import shard as shard_mod
+        dag2, k = shard_mod.prepare_plan(dag, self.db, self.n_shards)
+        self.last_shard_count = k
+        if k <= 1:
+            return dag, None
+        if self._shard_runtime is None:
+            self._shard_runtime = shard_mod.ShardRuntime(self.n_shards)
+        return dag2, self._shard_runtime
+
     def query(self, q: Query) -> Table:
         traversal.COUNTERS.reset()
         trace, ib0 = self._begin_query(f"query[{','.join(q.source_names())}]")
@@ -208,12 +239,16 @@ class GredoEngine:
         p = self.plan(q)
         naive = physical.build_gcdi(self.db, p, mode=self.mode)
         dag, report = self._lower(naive)
+        dag, shard_rt = self._shard_plan(dag)
         ctx = physical.ExecContext(self.db, trace=trace,
-                                   fence_device=self._fence_device())
+                                   fence_device=self._fence_device(),
+                                   shard=shard_rt)
         result = physical.execute(dag, ctx)
         notes = list(p.notes)
         if self.mode == "single" and q.match is not None:
             notes.insert(0, "single-engine: match via edge-table equi-joins")
+        if self.last_shard_count > 1:
+            notes.append(f"sharded execution: k={self.last_shard_count}")
         self.last_dag = dag
         self.last_naive_dag = naive
         self.last_report = report
@@ -277,6 +312,13 @@ class GredoEngine:
             lines.append("traversal kernels (this query): "
                          + " ".join(f"{k}={v:+g}"
                                     for k, v in sorted(tk.items())))
+        if self.last_shard_count > 1:
+            sm = {k.split(".", 1)[1]: v
+                  for k, v in self.last_registry_delta.items()
+                  if k.startswith("shard.") and v}
+            lines.append(f"sharded execution: k={self.last_shard_count}"
+                         + ("".join(f" {k}={v:+g}"
+                                    for k, v in sorted(sm.items()))))
         if self.telemetry is not None and self.telemetry.qerror.last_plan:
             lines.append("== q-error flags ==")
             lines += [f"  {m!r}" for m in self.telemetry.qerror.last_plan]
@@ -360,17 +402,22 @@ class GredoEngine:
         naive = physical.build_gcdia(self.db, p, task, mode=self.mode,
                                      use_kernel=use_kernel, iters=iters)
         dag, report = self._lower(naive)
+        dag, shard_rt = self._shard_plan(dag)
         ests = physical.estimate(dag, self.db)
         ctx = physical.ExecContext(self.db, interbuffer=self.interbuffer,
                                    ests=ests, trace=trace,
-                                   fence_device=self._fence_device())
+                                   fence_device=self._fence_device(),
+                                   shard=shard_rt)
         out = physical.execute(dag, ctx)
         self.last_dag = dag
         self.last_naive_dag = naive
         self.last_report = report
         self._last_ests = ests
+        notes = list(p.notes)
+        if self.last_shard_count > 1:
+            notes.append(f"sharded execution: k={self.last_shard_count}")
         self.last_stats = ExecStats(
-            plan_notes=list(p.notes), seconds=time.perf_counter() - t0,
+            plan_notes=notes, seconds=time.perf_counter() - t0,
             record_fetches=traversal.COUNTERS.record_fetches,
             cpu_ops=traversal.COUNTERS.cpu_ops,
             interbuffer_hit=dag.stats.cached,

@@ -11,6 +11,7 @@ GCDI plans").
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Any, Optional
 
@@ -55,13 +56,19 @@ class InterBuffer:
     when that cost exceeds a footprint-scaled threshold
     (``admit_cost_per_byte`` cost units per resident byte) — cheap-to-
     recompute bulky intermediates bypass the cache instead of evicting
-    expensive ones. Puts without an estimate are always admitted."""
+    expensive ones. Puts without an estimate are always admitted.
+
+    Thread-safe: morsel workers of the sharded executor hit ``get``/``put``
+    concurrently, so the store, byte accounting, and hit/miss counters are
+    guarded by one lock (LRU reordering under concurrency must not corrupt
+    the OrderedDict)."""
 
     def __init__(self, capacity_bytes: int = 2 << 30,
                  admit_cost_per_byte: float = 0.0):
         self.capacity_bytes = capacity_bytes
         self.admit_cost_per_byte = admit_cost_per_byte
         self._store: OrderedDict[str, jax.Array] = OrderedDict()
+        self._lock = threading.Lock()
         self._nbytes = 0
         self.hits = 0
         self.misses = 0
@@ -69,13 +76,14 @@ class InterBuffer:
         self.bypasses = 0
 
     def get(self, key: str):
-        mat = self._store.get(key)
-        if mat is not None:
-            self.hits += 1
-            self._store.move_to_end(key)
-            return mat
-        self.misses += 1
-        return None
+        with self._lock:
+            mat = self._store.get(key)
+            if mat is not None:
+                self.hits += 1
+                self._store.move_to_end(key)
+                return mat
+            self.misses += 1
+            return None
 
     def admits(self, nbytes: int, est_cost: Optional[float]) -> bool:
         if est_cost is None or self.admit_cost_per_byte <= 0:
@@ -85,16 +93,17 @@ class InterBuffer:
     def put(self, key: str, mat, est_cost: Optional[float] = None):
         if not hasattr(mat, "columns"):   # matrices live on device; Tables as-is
             mat = jnp.asarray(mat)
-        if not self.admits(value_nbytes(mat), est_cost):
-            self.bypasses += 1
+        with self._lock:
+            if not self.admits(value_nbytes(mat), est_cost):
+                self.bypasses += 1
+                return mat
+            old = self._store.pop(key, None)
+            if old is not None:
+                self._nbytes -= value_nbytes(old)
+            self._store[key] = mat
+            self._nbytes += value_nbytes(mat)
+            self._evict()
             return mat
-        old = self._store.pop(key, None)
-        if old is not None:
-            self._nbytes -= value_nbytes(old)
-        self._store[key] = mat
-        self._nbytes += value_nbytes(mat)
-        self._evict()
-        return mat
 
     def counters(self) -> str:
         """One-line hit/bypass accounting for explain output."""
@@ -117,11 +126,13 @@ class InterBuffer:
         return len(self._store)
 
     def _evict(self):
+        # caller holds self._lock
         while self._nbytes > self.capacity_bytes and self._store:
             _, victim = self._store.popitem(last=False)
             self._nbytes -= value_nbytes(victim)
             self.evictions += 1
 
     def clear(self):
-        self._store.clear()
-        self._nbytes = 0
+        with self._lock:
+            self._store.clear()
+            self._nbytes = 0

@@ -215,12 +215,35 @@ def _as_mask(cand: Optional[tuple[str, np.ndarray]],
     return mask
 
 
-def match(g: Graph, plan: PatternPlan,
-          extra_masks: Optional[dict] = None) -> Table:
-    """Execute P(G, P): returns the graph-relation as a Table with one column
-    per pattern var — vertex columns hold vids, edge columns hold edge tids.
-    ``extra_masks`` maps vertex vars to semi-join candidate masks (join
-    pushdown inputs, supplied as explicit plan edges by the physical DAG)."""
+@dataclasses.dataclass
+class MatchState:
+    """Prepared (pre-traversal) state of one pattern match: candidate/member
+    masks, per-edge masks, and the start frontier. Splitting preparation from
+    the hop loop lets the sharded executor run :func:`expand_chain` on
+    contiguous blocks of ``start_nids`` — every path is seeded by exactly one
+    start vertex and the hop loop preserves row order, so the block outputs
+    concatenate to the serial result bit-for-bit."""
+
+    plan: PatternPlan
+    chain_vars: list
+    edge_vars: list
+    hop_vars: list
+    hop_edges: list
+    member_of: "callable"
+    edge_mask: dict
+    start_nids: np.ndarray
+
+    def materialize_members(self) -> None:
+        """Force every lazily-built member mask (call before fanning the hop
+        loop out to worker threads — the memo is not thread-safe)."""
+        for v in self.hop_vars[1:]:
+            self.member_of(v)
+
+
+def prepare_match(g: Graph, plan: PatternPlan,
+                  extra_masks: Optional[dict] = None) -> MatchState:
+    """Candidate-set construction + start-frontier seeding of Algorithm 2
+    (everything before the hop loop)."""
     extra_masks = extra_masks or {}
     pattern = plan.pattern
     chain_vars = [pattern.vertices[0].var] + [e.dst for e in pattern.edges]
@@ -271,12 +294,20 @@ def match(g: Graph, plan: PatternPlan,
         v0_nids = g.label_nids(pattern.vertex(v0).label)
         start_nids = v0_nids[c0[1]]
 
-    paths_v = [start_nids]          # per-var nid columns, in hop order
-    paths_e: list[np.ndarray] = []  # per-edge tid columns
-    n_paths = len(start_nids)
-    row_ids = None                  # implicit: arange(n_paths)
+    return MatchState(plan, chain_vars, edge_vars, hop_vars, hop_edges,
+                      member_of, edge_mask, start_nids)
 
-    for hop, (evar, nvar) in enumerate(zip(hop_edges, hop_vars[1:])):
+
+def expand_chain(g: Graph, st: MatchState,
+                 start_nids: np.ndarray) -> dict[str, np.ndarray]:
+    """The hop loop of Algorithm 2 over a given start frontier. Returns the
+    graph-relation columns (vertex vars -> vids, edge vars -> edge tids),
+    rows in start-major order. Deferred predicates are NOT applied here."""
+    plan, pattern = st.plan, st.plan.pattern
+    paths_v = [np.asarray(start_nids)]  # per-var nid columns, in hop order
+    paths_e: list[np.ndarray] = []      # per-edge tid columns
+
+    for evar, nvar in zip(st.hop_edges, st.hop_vars[1:]):
         frontier = paths_v[-1]
         # base ⊕ delta expansion (tombstoned edges already filtered)
         row_rep, dst, eid = g.expand(frontier, reverse=plan.reverse)
@@ -286,15 +317,16 @@ def match(g: Graph, plan: PatternPlan,
         # build the hop filter lazily: unconstrained hops never allocate
         # (or intersect) an all-true mask
         keep = None
-        if member_of(nvar) is not None:
-            keep = member[nvar][dst]
+        nmask = st.member_of(nvar)
+        if nmask is not None:
+            keep = nmask[dst]
             traversal.COUNTERS.cpu_ops += total
         elif len(g.labels) > 1:
             # label constraint: dst must carry nvar's label
             keep = (g.vertex_label_code[dst]
                     == g.label_code_of(pattern.vertex(nvar).label))
-        if edge_mask[evar] is not None:
-            em = edge_mask[evar][eid]
+        if st.edge_mask[evar] is not None:
+            em = st.edge_mask[evar][eid]
             keep = em if keep is None else (keep & em)
             traversal.COUNTERS.cpu_ops += total
 
@@ -310,15 +342,25 @@ def match(g: Graph, plan: PatternPlan,
         paths_e = paths_e[::-1]
 
     cols: dict[str, np.ndarray] = {}
-    for var, col in zip(chain_vars, paths_v):
+    for var, col in zip(st.chain_vars, paths_v):
         cols[var] = g.vids_of(col)  # store vids (label-local) in the graph-relation
-    for evar, col in zip(edge_vars, paths_e):
+    for evar, col in zip(st.edge_vars, paths_e):
         cols[evar] = col
+    return cols
 
-    rel = Table(f"match:{pattern.graph}", cols)
+
+def match(g: Graph, plan: PatternPlan,
+          extra_masks: Optional[dict] = None) -> Table:
+    """Execute P(G, P): returns the graph-relation as a Table with one column
+    per pattern var — vertex columns hold vids, edge columns hold edge tids.
+    ``extra_masks`` maps vertex vars to semi-join candidate masks (join
+    pushdown inputs, supplied as explicit plan edges by the physical DAG)."""
+    st = prepare_match(g, plan, extra_masks)
+    cols = expand_chain(g, st, st.start_nids)
+    rel = Table(f"match:{plan.pattern.graph}", cols)
 
     # deferred predicate evaluation on the graph-relation (Cost_prop, Eq. 13)
-    return apply_deferred(g, pattern, rel, plan.deferred)
+    return apply_deferred(g, plan.pattern, rel, plan.deferred)
 
 
 def apply_deferred(g: Graph, pattern: Pattern, rel: Table, deferred: dict) -> Table:

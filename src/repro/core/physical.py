@@ -64,7 +64,7 @@ class ExecContext:
     def __init__(self, db: Database, interbuffer: Optional[InterBuffer] = None,
                  ests: Optional[dict] = None,
                  trace: Optional["telemetry.QueryTrace"] = None,
-                 fence_device: bool = False):
+                 fence_device: bool = False, shard=None):
         self.db = db
         self.interbuffer = interbuffer
         self.ests = ests          # id(node) -> (est_rows, est_cost): feeds
@@ -72,6 +72,7 @@ class ExecContext:
         self.trace = trace        # telemetry span sink; None = tracing off
         self.fence_device = fence_device  # block_until_ready GCDA outputs
                                           # inside their span (tracing only)
+        self.shard = shard        # shard.ShardRuntime; None = serial execution
         self.memo: dict = {}
         self.nodes_run = 0
         self.nodes_reused = 0     # inter-buffer hits during this execution
@@ -591,6 +592,31 @@ class EquiJoin(PhysicalOp):
         return f"EquiJoin[{self.jp.left}={self.jp.right}]"
 
 
+class Exchange(PhysicalOp):
+    """Partition-exchange: hash-partitions the child's rows on a join key
+    into k shards. Inserted under the build side of an EquiJoin by the shard
+    planner; the serial executor runs it as the identity (the partition is a
+    *view*, not a row shuffle), while the sharded executor materializes —
+    or reuses, when a co-partitioned build from an earlier query at the same
+    epoch is cached — the per-shard sorted key runs the join probes bind to."""
+    kind = "Exchange"
+
+    def __init__(self, child: PhysicalOp, key: str, k: int):
+        super().__init__(child)
+        self.key = key
+        self.k = int(k)
+        self.shards = int(k)
+
+    def params(self):
+        return (self.key, self.k)
+
+    def run(self, ctx, t: Table):
+        return t
+
+    def describe(self):
+        return f"Exchange[{self.key} -> {self.k}p]"
+
+
 class IntraFilter(PhysicalOp):
     """Join predicate whose sides already live in one cluster: a row filter."""
     kind = "IntraFilter"
@@ -1106,7 +1132,15 @@ def execute(node: PhysicalOp, ctx: ExecContext):
                           detail=node.describe())
     inputs = [execute(c, ctx) for c in node.children]
     t0 = time.perf_counter()
-    out = node.run(ctx, *inputs)
+    sh = ctx.shard
+    if sh is not None:
+        # morsel-parallel path: the runtime handles the kinds it shards and
+        # returns its NOT_SHARDED sentinel for everything else (serial run)
+        out = sh.run(node, ctx, inputs)
+        if out is sh.NOT_SHARDED:
+            out = node.run(ctx, *inputs)
+    else:
+        out = node.run(ctx, *inputs)
     node.stats.seconds += time.perf_counter() - t0
     node.stats.executed = True
     node.stats.rows = _result_rows(out)
@@ -1411,6 +1445,9 @@ def estimate(root: PhysicalOp, db: Database,
                 s *= pred_sel(pred)
             rows = first * s
             cost = cost_mod.cost_filter(first, len(n.preds))
+        elif isinstance(n, Exchange):
+            rows = first
+            cost = cost_mod.cost_exchange(first, n.k)
         elif isinstance(n, Rel2Matrix):
             rows = first
             width[id(n)] = float(len(n.columns))
@@ -1557,6 +1594,9 @@ def explain(root: PhysicalOp, stats: bool = False,
             acc = getattr(n, "access", None)    # index/zone/full decision)
             if acc is not None:
                 bits.append(f"access={acc}")
+            shards = getattr(n, "shards", None)  # shard-planner provenance
+            if shards is not None:
+                bits.append(f"shards={shards}")
         suffix = "  (" + ", ".join(bits) + ")" if bits else ""
         lines.append(f"{pad}{n.describe()}{suffix}")
         for c in n.children:

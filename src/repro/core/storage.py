@@ -463,6 +463,57 @@ def compute_stats(col: Column) -> ColumnStats:
     return ColumnStats(len(col), int(len(uniq)))
 
 
+def merge_stats(parts: list[ColumnStats]) -> ColumnStats:
+    """Additive rollup of per-shard :class:`ColumnStats` into one global
+    object — the cardinality model the optimizer consumes when a table is
+    partitioned. Row counts and min/max always combine exactly. While every
+    shard keeps exact per-value counts (ndv <= MCV_CAP after the merge),
+    the rollup is *bit-exact* against ``compute_stats`` on the unpartitioned
+    column: value counts sum, NDV is recounted from the merged map, and the
+    numeric histogram is rebuilt from the merged keys weighted by their
+    counts — the same binning ``_numeric_stats`` applies to the raw values.
+    Past the MCV cap the NDV falls back to a containment bound and
+    histograms re-bin onto union edges (approximate, like ``extend_numeric``)."""
+    parts = [p for p in parts if p is not None]
+    if not parts:
+        return ColumnStats(0, 0)
+    n = int(sum(p.n for p in parts))
+    mins = [p.vmin for p in parts if p.vmin is not None]
+    maxs = [p.vmax for p in parts if p.vmax is not None]
+    vmin = min(mins) if mins else None
+    vmax = max(maxs) if maxs else None
+    if all(p.value_counts is not None or p.ndv == 0 for p in parts):
+        vc: dict = {}
+        for p in parts:
+            for v, c in (p.value_counts or {}).items():
+                vc[v] = vc.get(v, 0) + c
+        if len(vc) <= MCV_CAP:
+            ndv = sum(1 for c in vc.values() if c > 0)
+            hist = edges = None
+            if vmin is not None and vc:
+                try:
+                    keys = np.array([float(v) for v in vc])
+                    weights = np.array([vc[v] for v in vc], dtype=np.float64)
+                    hist, edges = np.histogram(
+                        keys, bins=N_HIST_BUCKETS, weights=weights,
+                        range=(vmin, vmax if vmax > vmin else vmin + 1.0))
+                    hist = hist.astype(np.float64)
+                except (TypeError, ValueError):
+                    hist = edges = None
+            return ColumnStats(n, ndv, vmin, vmax, hist, edges, vc)
+    # some shard overflowed the MCV cap: approximate rollup
+    ndv = int(min(n, sum(p.ndv for p in parts)))
+    hparts = [p for p in parts if p._has_hist()]
+    hist = edges = None
+    if hparts and vmin is not None:
+        edges = np.linspace(vmin, vmax if vmax > vmin else vmin + 1.0,
+                            N_HIST_BUCKETS + 1)
+        hist = np.zeros(N_HIST_BUCKETS, dtype=np.float64)
+        for p in hparts:
+            hist += _rebin(p.hist, p.edges, edges)
+    return ColumnStats(n, ndv, vmin, vmax, hist, edges, None)
+
+
 # ---------------------------------------------------------------------------
 # Tables (unified record storage)
 # ---------------------------------------------------------------------------
@@ -1012,6 +1063,136 @@ def _csr_expand(csr: CSR, frontier: np.ndarray
     deg = csr.row_ptr[frontier + 1] - csr.row_ptr[frontier]
     pos, slots = expand_runs(csr.row_ptr[frontier], deg)
     return pos, csr.col_idx[slots].astype(np.int64), csr.edge_id[slots].astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Partitioned views (sharded execution; see docs/architecture.md)
+# ---------------------------------------------------------------------------
+
+
+def _col_slice(c: Column, lo: int, hi: int) -> Column:
+    """Zero-copy contiguous row slice of a column (shards never re-gather)."""
+    if isinstance(c, DictColumn):
+        return DictColumn(codes=c.codes[lo:hi], vocab=c.vocab)
+    if isinstance(c, RaggedColumn):
+        off = c.offsets
+        return RaggedColumn(values=c.values[off[lo]:off[hi]],
+                            offsets=off[lo:hi + 1] - off[lo])
+    return np.asarray(c)[lo:hi]
+
+
+def shard_bounds(n: int, k: int, align: int = 1) -> list[tuple[int, int]]:
+    """K contiguous [lo, hi) row blocks covering ``n`` rows, with block
+    boundaries rounded up to multiples of ``align`` (zone-chunk alignment:
+    a zone-map chunk never straddles two shards, so per-shard zone pruning
+    stays exact). Trailing shards may be empty when n < k*align."""
+    k = max(int(k), 1)
+    step = -(-n // k)                       # ceil
+    if align > 1:
+        step = -(-step // align) * align    # round up to the alignment
+    bounds = []
+    for i in range(k):
+        lo = min(i * step, n)
+        hi = min(lo + step, n)
+        bounds.append((lo, hi))
+    return bounds
+
+
+class TableShards:
+    """Contiguous row-block partitioning of one :class:`Table`: per-shard
+    column slices (zero-copy), per-shard :class:`ColumnStats`, and the
+    additive :func:`merge_stats` rollup. ``install_stats`` places the merged
+    rollup into the table's stats cache, so the optimizer's cardinality
+    model reads shard-rolled statistics through the unchanged
+    ``Table.stats`` API. Boundaries are zone-chunk aligned (``align``)."""
+
+    def __init__(self, table: Table, k: int, align: int = 2048):
+        self.table = table
+        self.k = max(int(k), 1)
+        self.bounds = shard_bounds(table.nrows, self.k, align)
+
+    def shard(self, i: int) -> Table:
+        lo, hi = self.bounds[i]
+        return Table(f"{self.table.name}#{i}",
+                     {n: _col_slice(c, lo, hi)
+                      for n, c in self.table.columns.items()})
+
+    def shard_stats(self, col: str) -> list[ColumnStats]:
+        return [compute_stats(_col_slice(self.table.columns[col], lo, hi))
+                for lo, hi in self.bounds]
+
+    def merged_stats(self, col: str) -> ColumnStats:
+        return merge_stats(self.shard_stats(col))
+
+    def install_stats(self, col: str) -> ColumnStats:
+        s = self.merged_stats(col)
+        self.table._stats[col] = s
+        return s
+
+    def rows_per_shard(self) -> list[int]:
+        return [hi - lo for lo, hi in self.bounds]
+
+
+class GraphPartitions:
+    """Contiguous nid-block partitioning of one :class:`Graph`'s topology.
+    Each partition sees a zero-copy CSR window (``csr_block``), the
+    per-partition sub-runs of every pending delta segment
+    (``delta_views`` — two binary searches per segment, no copies), and its
+    share of the tombstone bitmap — so O(batch) writes and epoch stamping
+    are preserved per partition: the partitioning is a *view*, rebuilt lazily
+    (``fresh``) when the graph's epoch moves past the stamped one."""
+
+    def __init__(self, g: Graph, k: int):
+        self.graph = g
+        self.k = max(int(k), 1)
+        self.epoch = g.epoch
+        self.bounds = shard_bounds(g.n_vertices, self.k)
+
+    def fresh(self) -> bool:
+        return self.epoch == self.graph.epoch
+
+    def csr_block(self, i: int, reverse: bool = False
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """Partition i's window of the base CSR: ``(row_ptr, col_idx,
+        edge_id, nid_lo)`` where ``row_ptr`` spans the block's vertices
+        (absolute slot offsets — slice ``col_idx``/``edge_id`` with them)."""
+        csr = self.graph.rev if reverse else self.graph.fwd
+        lo, hi = self.bounds[i]
+        lo = min(lo, csr.n_vertices)
+        hi = min(hi, csr.n_vertices)
+        rp = csr.row_ptr[lo:hi + 1]
+        s0, s1 = (int(rp[0]), int(rp[-1])) if len(rp) else (0, 0)
+        return rp, csr.col_idx[s0:s1], csr.edge_id[s0:s1], lo
+
+    def delta_views(self, i: int, reverse: bool = False) -> list:
+        lo, hi = self.bounds[i]
+        return [seg.range_view(lo, hi, reverse=reverse)
+                for seg in self.graph.delta.segments]
+
+    def edges_per_partition(self) -> list[int]:
+        """Live base+delta edge counts per partition (skew diagnostics)."""
+        out = []
+        live = self.graph.delta.live_edge_mask()
+        for i in range(self.k):
+            rp, _, eid, _ = self.csr_block(i)
+            n = int(live[eid].sum()) if len(eid) else 0
+            for _, _, deid in self.delta_views(i):
+                if len(deid):
+                    n += int(live[deid].sum())
+            out.append(n)
+        return out
+
+    def tombstones_per_partition(self) -> list[int]:
+        out = []
+        live = self.graph.delta.live_edge_mask()
+        for i in range(self.k):
+            _, _, eid, _ = self.csr_block(i)
+            n = int((~live[eid]).sum()) if len(eid) else 0
+            for _, _, deid in self.delta_views(i):
+                if len(deid):
+                    n += int((~live[deid]).sum())
+            out.append(n)
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from typing import Any, Callable, Optional
 
@@ -48,19 +49,24 @@ import numpy as np
 
 
 class Counter:
-    """Monotonic counter. ``snapshot()`` values subtract cleanly."""
+    """Monotonic counter. ``snapshot()`` values subtract cleanly.
+    ``inc`` is lock-guarded — ``+=`` is not atomic under threads and morsel
+    workers increment shared counters concurrently."""
 
-    __slots__ = ("name", "value")
+    __slots__ = ("name", "value", "_lock")
 
     def __init__(self, name: str):
         self.name = name
         self.value = 0
+        self._lock = threading.Lock()
 
     def inc(self, n: float = 1) -> None:
-        self.value += n
+        with self._lock:
+            self.value += n
 
     def reset(self) -> None:
-        self.value = 0
+        with self._lock:
+            self.value = 0
 
 
 class Gauge:
@@ -91,7 +97,8 @@ class Histogram:
     value (the last bucket is open-ended). Percentiles interpolate linearly
     inside the winning bucket and clamp to the observed min/max."""
 
-    __slots__ = ("name", "bounds", "counts", "count", "sum", "min", "max")
+    __slots__ = ("name", "bounds", "counts", "count", "sum", "min", "max",
+                 "_lock")
 
     def __init__(self, name: str, bounds: tuple = DEFAULT_LATENCY_BUCKETS):
         self.name = name
@@ -101,14 +108,16 @@ class Histogram:
         self.sum = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        self._lock = threading.Lock()
 
     def observe(self, v: float) -> None:
         v = float(v)
-        self.counts[int(np.searchsorted(self.bounds, v, side="left"))] += 1
-        self.count += 1
-        self.sum += v
-        self.min = min(self.min, v)
-        self.max = max(self.max, v)
+        with self._lock:
+            self.counts[int(np.searchsorted(self.bounds, v, side="left"))] += 1
+            self.count += 1
+            self.sum += v
+            self.min = min(self.min, v)
+            self.max = max(self.max, v)
 
     def percentile(self, q: float) -> float:
         """q in [0, 100]. 0 observations -> nan."""
@@ -143,11 +152,12 @@ class Histogram:
                 "p50": self.p50, "p95": self.p95, "p99": self.p99}
 
     def reset(self) -> None:
-        self.counts[:] = 0
-        self.count = 0
-        self.sum = 0.0
-        self.min = float("inf")
-        self.max = float("-inf")
+        with self._lock:
+            self.counts[:] = 0
+            self.count = 0
+            self.sum = 0.0
+            self.min = float("inf")
+            self.max = float("-inf")
 
 
 class Registry:
@@ -169,6 +179,7 @@ class Registry:
     def __init__(self):
         self._metrics: dict[str, Any] = {}
         self._sources: dict[str, Callable[[], dict]] = {}
+        self._lock = threading.Lock()
 
     def counter(self, name: str) -> Counter:
         return self._get(name, Counter)
@@ -178,34 +189,41 @@ class Registry:
 
     def histogram(self, name: str,
                   bounds: tuple = DEFAULT_LATENCY_BUCKETS) -> Histogram:
-        m = self._metrics.get(name)
-        if m is None:
-            m = self._metrics[name] = Histogram(name, bounds)
-        elif not isinstance(m, Histogram):
-            raise TypeError(f"{name} is a {type(m).__name__}, not Histogram")
-        return m
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = Histogram(name, bounds)
+            elif not isinstance(m, Histogram):
+                raise TypeError(f"{name} is a {type(m).__name__}, not Histogram")
+            return m
 
     def _get(self, name: str, cls):
-        m = self._metrics.get(name)
-        if m is None:
-            m = self._metrics[name] = cls(name)
-        elif not isinstance(m, cls):
-            raise TypeError(f"{name} is a {type(m).__name__}, not {cls.__name__}")
-        return m
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls(name)
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"{name} is a {type(m).__name__}, not {cls.__name__}")
+            return m
 
     def register_source(self, namespace: str, fn: Callable[[], dict]) -> None:
         """``fn()`` contributes ``{f"{namespace}.{k}": v}`` per snapshot."""
-        self._sources[namespace] = fn
+        with self._lock:
+            self._sources[namespace] = fn
 
     def snapshot(self) -> dict:
         out: dict[str, float] = {}
-        for name, m in self._metrics.items():
+        with self._lock:
+            metrics = list(self._metrics.items())
+            sources = list(self._sources.items())
+        for name, m in metrics:
             if isinstance(m, Histogram):
                 for k, v in m.summary().items():
                     out[f"{name}.{k}"] = v
             else:
                 out[name] = m.value
-        for ns, fn in self._sources.items():
+        for ns, fn in sources:
             try:
                 vals = fn()
             except Exception:       # a dead source never breaks a snapshot
@@ -230,7 +248,9 @@ class Registry:
         return out
 
     def reset(self) -> None:
-        for m in self._metrics.values():
+        with self._lock:
+            metrics = list(self._metrics.values())
+        for m in metrics:
             m.reset()
 
     def __len__(self):
@@ -280,6 +300,7 @@ class QueryTrace:
         self.t0 = time.perf_counter() if origin is None else origin
         self.spans: list[Span] = []
         self._stack: list[int] = []
+        self._lock = threading.Lock()
         root = Span(id=0, parent=-1, name="query", cat="query",
                     ts=0.0, detail=label)
         self.spans.append(root)
@@ -287,22 +308,24 @@ class QueryTrace:
 
     # -- recording --
     def begin(self, name: str, cat: str = "gcdi", detail: str = "") -> int:
-        sid = len(self.spans)
-        self.spans.append(Span(id=sid, parent=self._stack[-1], name=name,
-                               cat=cat, ts=time.perf_counter() - self.t0,
-                               detail=detail))
-        self._stack.append(sid)
-        return sid
+        with self._lock:
+            sid = len(self.spans)
+            self.spans.append(Span(id=sid, parent=self._stack[-1], name=name,
+                                   cat=cat, ts=time.perf_counter() - self.t0,
+                                   detail=detail))
+            self._stack.append(sid)
+            return sid
 
     def end(self, sid: int, **args) -> None:
-        s = self.spans[sid]
-        s.dur = (time.perf_counter() - self.t0) - s.ts
-        if args:
-            s.args.update(args)
-        while self._stack and self._stack[-1] != sid:
-            self._stack.pop()       # tolerate unbalanced ends
-        if self._stack:
-            self._stack.pop()
+        with self._lock:
+            s = self.spans[sid]
+            s.dur = (time.perf_counter() - self.t0) - s.ts
+            if args:
+                s.args.update(args)
+            while self._stack and self._stack[-1] != sid:
+                self._stack.pop()       # tolerate unbalanced ends
+            if self._stack:
+                self._stack.pop()
 
     def instant(self, name: str, detail: str = "", **args) -> int:
         sid = self.begin(name, cat="cache", detail=detail)
@@ -373,14 +396,20 @@ class TraceCollector:
         self.max_spans = int(max_spans)
         self.traces: list[QueryTrace] = []
         self.dropped_spans = 0
+        self._lock = threading.Lock()
 
     def start_query(self, label: str) -> QueryTrace:
         qt = QueryTrace(label)
-        self.traces.append(qt)
-        self.trim()
+        with self._lock:
+            self.traces.append(qt)
+            self._trim_locked()
         return qt
 
     def trim(self) -> None:
+        with self._lock:
+            self._trim_locked()
+
+    def _trim_locked(self) -> None:
         total = sum(len(t.spans) for t in self.traces)
         while len(self.traces) > 1 and total > self.max_spans:
             victim = self.traces.pop(0)

@@ -361,6 +361,40 @@ def q_range_narrow(lo: float = 100.0, hi: float = 100.5) -> Query:
     )
 
 
+def q_shard_join() -> Query:
+    """Scan/join-heavy sharded-execution exemplar: the full Orders document
+    collection (the largest base table) filtered by two pushed predicates,
+    then FK-joined to Customer and Product on the integer keys. No graph
+    pattern and no expected indexes — execution is dominated by the scan
+    and the two large equi-joins, which is exactly what hash-sharded
+    morsel-parallel execution accelerates."""
+    return Query(
+        select=("Orders.order_id", "Orders.quantity", "Orders.shipping.days",
+                "Customer.id", "Customer.age", "Product.price"),
+        froms=("Orders", "Customer", "Product"),
+        joins=(JoinPred("Orders.customer_id", "Customer.id"),
+               JoinPred("Orders.product_id", "Product.id")),
+        where=(Predicate("Orders.quantity", ">=", 2),
+               Predicate("Orders.shipping.days", "<=", 7)),
+    )
+
+
+def a_shard_reg() -> GCDIATask:
+    """GCDIA rider for the shard benchmark: Rel2Matrix feature/label
+    matrices over the numeric GCDI columns feeding a logistic REGRESSION
+    (output stays d-sized and device-resident), so the born-sharded
+    GCDI -> GCDA matrix handoff sits on the critical path at any row
+    count."""
+    return GCDIATask(
+        integration=q_shard_join(),
+        analytics=AnalyticsTask("REGRESSION", [
+            ("rel2matrix", ("Orders.quantity", "Orders.shipping.days",
+                            "Customer.age", "Product.price")),
+            ("rel2matrix", ("Orders.quantity",)),
+        ]),
+    )
+
+
 def q_g5() -> Query:
     """G5: range predicate on edge property (match-trimming candidate:
     v-e-v with edge-only predicates, but projection references vertices)."""

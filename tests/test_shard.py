@@ -1,0 +1,394 @@
+"""Sharded morsel-parallel execution: bit-for-bit equivalence with the
+serial single-stream path, per-shard stats rollup exactness, partition
+plumbing, and thread-safety of the shared runtime structures.
+
+The property test (satellite 3 of the sharding PR) drives two identical
+databases through the same random delta/tombstone/compaction stream and
+asserts the sharded engine (k ∈ {1,2,4,7}) returns exactly the rows the
+serial engine does, in the same order, across all three ablation modes.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost, join as join_mod, shard, storage, telemetry
+from repro.core.engine import GredoEngine
+from repro.core.interbuffer import InterBuffer
+from repro.core.schema import (AnalyticsTask, GCDIATask, JoinPred, Predicate,
+                               Query, chain_pattern)
+from repro.core.storage import (Database, DictColumn, Graph, GraphPartitions,
+                                Table, TableShards, compute_stats, merge_stats,
+                                shard_bounds)
+
+pytestmark = pytest.mark.fast
+
+MODES = ("gredo", "dual", "single")
+TOPICS = ["food", "music", "sport", "code", "art"]
+
+
+# ---------------------------------------------------------------------------
+# fixture: a compact multi-model db (graph + two tables) built from a seed
+# ---------------------------------------------------------------------------
+
+def tiny_db(seed: int) -> Database:
+    rng = np.random.default_rng(seed)
+    n_p, n_t, n_c, n_o = 160, 24, 120, 1500
+
+    persons = Table("Persons", {
+        "pid": np.arange(n_p, dtype=np.int64),
+        "country": DictColumn(rng.choice(["de", "fi", "jp", "us"], n_p)),
+    })
+    tags = Table("Tags", {
+        "tid": np.arange(n_t, dtype=np.int64),
+        "content": DictColumn([TOPICS[i % len(TOPICS)] for i in range(n_t)]),
+    })
+    n_e = 900
+    edges = Table("G_edges", {
+        "svid": rng.integers(0, n_p, n_e).astype(np.int64),
+        "tvid": rng.integers(0, n_t, n_e).astype(np.int64),
+        "weight": rng.uniform(0.0, 1.0, n_e),
+    })
+    g = Graph("G", {"Persons": persons, "Tags": tags}, edges,
+              "Persons", "Tags")
+
+    customer = Table("Customer", {
+        "id": np.arange(n_c, dtype=np.int64),
+        "person_id": rng.permutation(n_p)[:n_c].astype(np.int64),
+        "age": rng.integers(18, 80, n_c).astype(np.int64),
+    })
+    orders = Table("Orders", {
+        "order_id": np.arange(n_o, dtype=np.int64),
+        "customer_id": rng.integers(0, n_c, n_o).astype(np.int64),
+        "quantity": rng.integers(1, 5, n_o).astype(np.int64),
+        "days": rng.integers(1, 10, n_o).astype(np.int64),
+    })
+
+    db = Database()
+    db.add_graph(g)
+    db.add_table(customer)
+    db.add_table(orders)
+    return db
+
+
+def cross_model_query() -> Query:
+    """Match + two joins + predicates on table, document-ish and graph vars:
+    exercises Select/EquiJoin/MatchPattern (TableJoinMatch in single mode)."""
+    return Query(
+        select=("Customer.id", "Orders.order_id", "Orders.quantity",
+                "t.tid", "p.pid"),
+        froms=("Customer", "Orders"),
+        match=chain_pattern("G", ("p", "Persons", "G", "t", "Tags")),
+        joins=(JoinPred("Customer.person_id", "p.pid"),
+               JoinPred("Orders.customer_id", "Customer.id")),
+        where=(Predicate("Orders.quantity", ">=", 2),
+               Predicate("t.content", "==", "food")),
+    )
+
+
+def _col_vals(t: Table, name: str) -> np.ndarray:
+    c = t.columns[name]
+    if isinstance(c, DictColumn):
+        return c.decode(c.codes)
+    return np.asarray(c)
+
+
+def assert_tables_equal(a: Table, b: Table) -> None:
+    assert list(a.columns) == list(b.columns)
+    assert a.nrows == b.nrows
+    for name in a.columns:
+        va, vb = _col_vals(a, name), _col_vals(b, name)
+        assert np.array_equal(va, vb), f"column {name} diverged"
+
+
+def apply_mutation(g: Graph, op: str, rng: np.random.Generator) -> None:
+    """One step of the random delta/tombstone/compaction stream. The rng is
+    consumed identically for both databases, so the streams are identical."""
+    if op == "edges":
+        m = int(rng.integers(10, 60))
+        g.insert_edges({
+            "svid": rng.integers(0, 160, m).astype(np.int64),
+            "tvid": rng.integers(0, 24, m).astype(np.int64),
+            "weight": rng.uniform(0.0, 1.0, m),
+        })
+    elif op == "tombstone":
+        live = g.live_edge_ids()
+        m = min(int(rng.integers(5, 40)), len(live))
+        if m:
+            g.delete_edges(rng.choice(live, m, replace=False))
+    elif op == "compact":
+        g.compact()
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: property test — sharded == serial bit-for-bit
+# ---------------------------------------------------------------------------
+
+@st.composite
+def shard_scenario(draw):
+    mode = draw(st.sampled_from(MODES))
+    k = draw(st.sampled_from((1, 2, 4, 7)))
+    seed = draw(st.integers(min_value=0, max_value=2**16))
+    n_ops = draw(st.integers(min_value=1, max_value=3))
+    ops = tuple(draw(st.sampled_from(("edges", "tombstone", "compact")))
+                for _ in range(n_ops))
+    return mode, k, seed, ops
+
+
+@settings(max_examples=10, deadline=None)
+@given(shard_scenario())
+def test_sharded_matches_serial_under_mutation_stream(scenario):
+    mode, k, seed, ops = scenario
+    db_a, db_b = tiny_db(seed), tiny_db(seed)
+    q = cross_model_query()
+    saved = cost.SHARD_MIN_ROWS
+    cost.SHARD_MIN_ROWS = 0          # force sharding on the tiny fixture
+    try:
+        serial = GredoEngine(db_a, mode=mode)
+        sharded = GredoEngine(db_b, mode=mode, n_shards=k)
+        assert_tables_equal(serial.query(q), sharded.query(q))
+        rng_a = np.random.default_rng(seed + 1)
+        rng_b = np.random.default_rng(seed + 1)
+        for op in ops:
+            apply_mutation(db_a.graphs["G"], op, rng_a)
+            apply_mutation(db_b.graphs["G"], op, rng_b)
+            assert_tables_equal(serial.query(q), sharded.query(q))
+        if k > 1:
+            assert sharded.last_shard_count == k
+    finally:
+        cost.SHARD_MIN_ROWS = saved
+
+
+def test_sharded_gcda_born_sharded_and_equal():
+    """Rel2Matrix output must reach the GCDA kernel without a host gather
+    (asserted through the sharding spec in the span metadata) and the gram
+    matrix must equal the serial one bit-for-bit."""
+    task = GCDIATask(
+        integration=cross_model_query(),
+        analytics=AnalyticsTask("MULTIPLY", [
+            ("rel2matrix", ("Orders.quantity", "Orders.order_id", "t.tid"))]),
+    )
+    saved = cost.SHARD_MIN_ROWS
+    cost.SHARD_MIN_ROWS = 0
+    try:
+        serial = GredoEngine(tiny_db(7), mode="gredo")
+        sharded = GredoEngine(tiny_db(7), mode="gredo", n_shards=4,
+                              telemetry=True)
+        ref = np.asarray(serial.analyze(task))
+        got = np.asarray(sharded.analyze(task))
+        assert np.array_equal(ref, got)
+        spans = [s for s in sharded.telemetry.collector.last().spans
+                 if s.name == "Rel2Matrix"]
+        assert spans and spans[0].args.get("born_sharded") is True
+        assert spans[0].args.get("host_gather") is False
+        assert spans[0].args.get("shards") == 4
+    finally:
+        cost.SHARD_MIN_ROWS = saved
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: shard provenance in explain + skew metrics
+# ---------------------------------------------------------------------------
+
+def test_explain_shows_shard_provenance_and_metrics():
+    saved = cost.SHARD_MIN_ROWS
+    cost.SHARD_MIN_ROWS = 0
+    try:
+        eng = GredoEngine(tiny_db(3), mode="gredo", n_shards=4,
+                          telemetry=True)
+        eng.query(cross_model_query())
+        txt = eng.explain_last()
+        assert "shards=4" in txt
+        assert "Exchange" in txt
+        assert "sharded execution: k=4" in txt
+        snap = eng.telemetry.registry.snapshot()
+        assert snap.get("shard.morsels", 0) >= 1
+        assert snap.get("shard.rows_shard_max", 0) >= snap.get(
+            "shard.rows_shard_mean", 0)
+        assert "shard.queue_wait_s" in snap
+    finally:
+        cost.SHARD_MIN_ROWS = saved
+
+
+def test_exchange_partition_reused_across_queries():
+    saved = cost.SHARD_MIN_ROWS
+    cost.SHARD_MIN_ROWS = 0
+    try:
+        eng = GredoEngine(tiny_db(11), mode="gredo", n_shards=4)
+        q = cross_model_query()
+        eng.query(q)
+        m0 = eng._shard_runtime.metrics()
+        eng.query(q)
+        m1 = eng._shard_runtime.metrics()
+        assert m1["exchanges_reused"] > m0["exchanges_reused"]
+        assert m1["exchanges_built"] == m0["exchanges_built"]
+    finally:
+        cost.SHARD_MIN_ROWS = saved
+
+
+# ---------------------------------------------------------------------------
+# tentpole internals: cost gate, hash partitions, per-shard stats rollup
+# ---------------------------------------------------------------------------
+
+def test_cost_gate_keeps_small_inputs_serial():
+    assert cost.choose_shard_count(100, 4) == 1
+    assert cost.choose_shard_count(cost.SHARD_MIN_ROWS * 10, 4) == 4
+    assert cost.choose_shard_count(cost.SHARD_MIN_ROWS * 10, 1) == 1
+    # end to end: the tiny fixture is far below SHARD_MIN_ROWS, so a 4-shard
+    # engine must still choose the single-stream plan.
+    eng = GredoEngine(tiny_db(5), mode="gredo", n_shards=4)
+    eng.query(cross_model_query())
+    assert eng.last_shard_count == 1
+    assert "Exchange" not in eng.explain_last()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16),
+       st.sampled_from((1, 2, 4, 7)), st.booleans())
+def test_build_partition_probe_matches_equi_join(seed, k, as_str):
+    rng = np.random.default_rng(seed)
+    n_l, n_r = int(rng.integers(1, 400)), int(rng.integers(1, 400))
+    lk = rng.integers(0, 50, n_l).astype(np.int64)
+    rk = rng.integers(0, 50, n_r).astype(np.int64)
+    if as_str:
+        lt = Table("L", {"key": DictColumn([f"k{v}" for v in lk])})
+        rt = Table("R", {"key": DictColumn([f"k{v}" for v in rk])})
+    else:
+        lt = Table("L", {"key": lk})
+        rt = Table("R", {"key": rk})
+    li_ref, ri_ref = join_mod.equi_join_indices(lt, "key", rt, "key")
+
+    part = shard.build_partition(rt, "key", k)
+    lkeys, lrows = join_mod._key_arrays(lt, "key")
+    sh_ids = shard.hash_shard_ids(lkeys, k)
+    li, ri = [], []
+    for i in range(n_l):
+        s = int(sh_ids[i])
+        ks = part.keys[s]
+        lo = int(np.searchsorted(ks, lkeys[i], "left"))
+        hi = int(np.searchsorted(ks, lkeys[i], "right"))
+        for p in range(lo, hi):
+            li.append(lrows[i])
+            ri.append(part.rows_cat[part.base[s] + p])
+    assert np.array_equal(np.asarray(li, dtype=np.int64), li_ref)
+    assert np.array_equal(np.asarray(ri, dtype=np.int64), ri_ref)
+    assert int(part.rows_per_shard().sum()) == n_r
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2**16),
+       st.sampled_from((1, 2, 4, 7)))
+def test_per_shard_stats_rollup_is_exact(seed, k):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(16, 3000))
+    tbl = Table("S", {
+        "num": rng.integers(0, 40, n).astype(np.int64),
+        "cat": DictColumn(rng.choice(["a", "b", "c", "d"], n)),
+    })
+    shards = TableShards(tbl, k, align=64)
+    for col in ("num", "cat"):
+        whole = compute_stats(tbl.columns[col])
+        rolled = merge_stats([shards.shard_stats(col)[i]
+                              for i in range(len(shards.bounds))])
+        assert rolled.n == whole.n
+        assert rolled.ndv == whole.ndv
+        if whole.value_counts is not None:
+            assert rolled.value_counts == whole.value_counts
+        if whole.hist is not None and rolled.hist is not None:
+            assert np.isclose(rolled.hist.sum(), whole.hist.sum())
+            assert np.isclose(rolled.vmin, whole.vmin)
+            assert np.isclose(rolled.vmax, whole.vmax)
+
+
+def test_table_shards_concat_roundtrip():
+    rng = np.random.default_rng(0)
+    n = 999
+    tbl = Table("T", {
+        "a": rng.integers(0, 9, n).astype(np.int64),
+        "s": DictColumn(rng.choice(["x", "y", "z"], n)),
+    })
+    ts = TableShards(tbl, 4, align=128)
+    lo_hi = ts.bounds
+    assert lo_hi[0][0] == 0 and lo_hi[-1][1] == n
+    assert all(lo_hi[i][1] == lo_hi[i + 1][0] for i in range(len(lo_hi) - 1))
+    cat_a = np.concatenate([_col_vals(ts.shard(i), "a")
+                            for i in range(len(lo_hi))])
+    cat_s = np.concatenate([_col_vals(ts.shard(i), "s")
+                            for i in range(len(lo_hi))])
+    assert np.array_equal(cat_a, _col_vals(tbl, "a"))
+    assert np.array_equal(cat_s, _col_vals(tbl, "s"))
+    assert int(np.sum(ts.rows_per_shard())) == n
+
+
+def test_graph_partitions_account_for_delta_and_tombstones():
+    db = tiny_db(2)
+    g = db.graphs["G"]
+    rng = np.random.default_rng(2)
+    g.insert_edges({"svid": rng.integers(0, 160, 50).astype(np.int64),
+                    "tvid": rng.integers(0, 24, 50).astype(np.int64),
+                    "weight": rng.uniform(0.0, 1.0, 50)})
+    g.delete_edges(g.live_edge_ids()[:30])
+    parts = GraphPartitions(g, 4)
+    assert int(np.sum(parts.edges_per_partition())) == g.n_live_edges
+    assert int(np.sum(parts.tombstones_per_partition())) == 30
+    assert parts.fresh()
+    g.insert_edges({"svid": np.array([0], dtype=np.int64),
+                    "tvid": np.array([0], dtype=np.int64),
+                    "weight": np.array([0.5])})
+    assert not parts.fresh()
+
+
+def test_shard_bounds_cover_and_align():
+    for n in (0, 1, 100, 4097):
+        for k in (1, 2, 4, 7):
+            b = shard_bounds(n, k, align=64)
+            assert len(b) == k
+            assert b[0][0] == 0 and b[-1][1] == n
+            for (lo, hi), (lo2, _hi2) in zip(b, b[1:]):
+                assert hi == lo2
+                assert lo % 64 == 0 or lo == n
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: concurrent access to InterBuffer / Registry / TraceCollector
+# ---------------------------------------------------------------------------
+
+def test_concurrent_interbuffer_registry_collector():
+    ib = InterBuffer(capacity_bytes=1 << 20)
+    reg = telemetry.Registry()
+    col = telemetry.TraceCollector(max_spans=256)
+    errors: list[BaseException] = []
+    n_threads, n_iter = 8, 200
+
+    def worker(tid: int):
+        try:
+            rng = np.random.default_rng(tid)
+            for i in range(n_iter):
+                key = f"k{tid % 4}:{i % 8}"
+                ib.put(key, rng.standard_normal(32), est_cost=1.0)
+                ib.get(key)
+                ib.get(f"k{(tid + 1) % 4}:{i % 8}")
+                reg.counter("t.ops").inc()
+                reg.histogram("t.lat").observe(float(i))
+                qt = col.start_query(f"q{tid}")
+                qt.instant("tick", i=i)
+                col.trim()
+        except BaseException as e:   # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert not errors
+    snap = reg.snapshot()
+    assert snap["t.ops"] == n_threads * n_iter
+    assert snap["t.lat.count"] == n_threads * n_iter
+    assert col.last() is not None
