@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify test-fast bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace bench-kernels bench-shard
+.PHONY: test verify test-fast lint verify-plans bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace bench-kernels bench-shard
 
 # tier-1 verification (the full suite — unchanged)
 test:
@@ -15,6 +15,21 @@ verify: test-fast
 # cardinality / write-path modules, selected by the `fast` pytest marker
 test-fast:
 	python -m pytest -x -q -m fast
+
+# repo-wide AST lint (GDL001-GDL005: module-global mutable state, host
+# syncs in operator hot paths, nested locks, bare excepts, mutable default
+# args). Findings not in lint_baseline.json fail the build; regenerate the
+# baseline with `python -m repro.analysis.lint --write-baseline` only for
+# findings that are genuinely pre-existing and safe.
+lint:
+	python -m repro.analysis.lint
+
+# static plan-verification sweep: every m2bench query/task x
+# {gredo,dual,single} x shards {1,4} x device lowering on/off, verified
+# without executing (see repro.core.verify). Report lands in
+# experiments/verify_sweep.json; ERROR-severity violations fail the run.
+verify-plans:
+	python -m repro.analysis.verify_sweep
 
 # small-size benchmark pass (CI smoke): paper suite fast mode + update +
 # optimizer + index suites

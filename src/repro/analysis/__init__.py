@@ -1,0 +1,3 @@
+"""Repo-wide static analysis: the AST lint pass (``repro.analysis.lint``)
+and the plan-verification sweep (``repro.analysis.verify_sweep``). Both run
+in CI — ``make lint`` / ``make verify-plans``."""

@@ -220,3 +220,39 @@ def choose_shard_count(dominant_rows: float, k_requested: int) -> int:
     if k == 1 or dominant_rows < SHARD_MIN_ROWS:
         return 1
     return k
+
+
+# ---------------------------------------------------------------------------
+# Device traversal capacity (§ device lowering): shared by the optimizer's
+# access-path selection and the static plan verifier — the two must derive
+# the identical bound or verification would reject the optimizer's own plans.
+# ---------------------------------------------------------------------------
+
+
+def padded_capacity(peak: float) -> int:
+    """Static-shape frontier capacity for an estimated peak candidate count:
+    2x headroom (estimates err low on skewed fan-out), rounded up to a
+    power of two with a 128-slot floor (one compaction block)."""
+    need = max(int(peak * 2.0), 1)
+    return 1 << max(7, (need - 1).bit_length())
+
+
+def device_frontier_peak(g, pplan) -> float:
+    """Statically derivable peak frontier of a mask-free chain pattern:
+    start-label cardinality scaled by pushed-predicate selectivity, then
+    per-hop label-aware expansion — *pre*-predicate, since the kernel's
+    capacity must hold every candidate before in-kernel compaction."""
+    pat = pplan.pattern
+    chain = [pat.vertices[0].var] + [e.dst for e in pat.edges]
+    hop_order = chain[::-1] if pplan.reverse else chain
+    start = hop_order[0]
+    stbl = g.vertex_tables[pat.vertex(start).label]
+    n_start = float(stbl.nrows)
+    for pr in pplan.pushed.get(start, []):
+        n_start *= stbl.stats(pr.column).selectivity(pr)
+    peak = front = max(n_start, 1.0)
+    for v in hop_order[:-1]:
+        front *= g.hop_expansion(reverse=pplan.reverse,
+                                 label=pat.vertex(v).label)
+        peak = max(peak, front)
+    return peak

@@ -26,6 +26,7 @@ import numpy as np
 from . import join as join_mod, optimizer as optimizer_mod
 from . import pattern as pattern_mod, physical, planner
 from . import telemetry as telemetry_mod
+from . import verify as verify_mod
 from .interbuffer import InterBuffer
 from .schema import GCDIATask, Query
 from .storage import Database, Table
@@ -82,11 +83,18 @@ class GredoEngine:
                  admit_cost_per_byte: float = 0.05,
                  join_enum: str = "dp",
                  telemetry: "bool | telemetry_mod.Telemetry | None" = None,
-                 n_shards: int = 1):
+                 n_shards: int = 1,
+                 debug: bool = False):
         assert mode in ("gredo", "dual", "single")
         assert join_enum in ("dp", "dp-leftdeep", "greedy")
         self.db = db
         self.mode = mode
+        # debug mode: statically verify every plan (naive, post-optimizer,
+        # post-shard-rewrite) before execution and raise
+        # PlanVerificationError on ERROR-severity violations; explain output
+        # grows `verify:` lines. See repro.core.verify for the rule catalog.
+        self.debug = debug
+        self.last_verify: Optional[verify_mod.VerifyReport] = None
         # morsel-parallel sharded execution (repro.core.shard). n_shards is
         # the *requested* shard count; the §6.3 sharded cost model may still
         # choose serial execution per query (small dominant inputs) — the
@@ -215,6 +223,58 @@ class GredoEngine:
                                           join_enum=self.join_enum)
         return dag, None
 
+    # ---------------------------------------------------- static verification
+    def _verify_stages(self, naive: physical.PhysicalOp,
+                       optimized: Optional[physical.PhysicalOp],
+                       sharded: Optional[physical.PhysicalOp]
+                       ) -> verify_mod.VerifyReport:
+        """Run the static plan verifier over every rewrite stage of one
+        plan: each stage's DAG is schema-checked against the live catalog,
+        signatures are checked for coherence *across* stages (V-SIG: the
+        inter-buffer spans them), and each rewrite boundary is checked for
+        type equivalence (V-EQ: rewrites may reorder, never retype)."""
+        report = verify_mod.VerifyReport()
+        sigs: dict = {}
+        verify_mod.verify_plan(naive, self.db, report, sigs)
+        prev, prev_label = naive, "naive"
+        for dag, label in ((optimized, "optimizer"), (sharded, "shard")):
+            if dag is None or dag is prev:
+                continue
+            verify_mod.verify_plan(dag, self.db, report, sigs)
+            verify_mod.verify_equivalence(prev, dag, self.db,
+                                          f"{prev_label}->{label}", report)
+            prev, prev_label = dag, label
+        self.last_verify = report
+        return report
+
+    def verify(self, q: "Query | GCDIATask") -> verify_mod.VerifyReport:
+        """Statically verify the plan this engine would run for ``q`` —
+        naive build, optimizer rewrite, and shard rewrite — without
+        executing anything. Returns the report (``report.ok`` means no
+        ERROR-severity violations; WARNs flag silent promotions and runtime
+        fallbacks)."""
+        if isinstance(q, GCDIATask):
+            p = self.plan(q.integration)
+            naive = physical.build_gcdia(self.db, p, q, mode=self.mode)
+        else:
+            naive = self.physical_plan(q)
+        dag, _ = self._lower(naive)
+        sharded = None
+        if self.n_shards > 1:
+            from . import shard as shard_mod
+            sharded, k = shard_mod.prepare_plan(dag, self.db, self.n_shards)
+            if k <= 1:
+                sharded = None
+        return self._verify_stages(naive, dag, sharded)
+
+    def _debug_verify(self, naive, dag, final) -> None:
+        if not self.debug:
+            return
+        report = self._verify_stages(naive, dag if dag is not naive else None,
+                                     final if final is not dag else None)
+        if not report.ok:
+            raise verify_mod.PlanVerificationError(report)
+
     def _shard_plan(self, dag: physical.PhysicalOp
                     ) -> tuple[physical.PhysicalOp, Optional[object]]:
         """Rewrite the post-optimizer DAG for morsel-parallel execution when
@@ -239,7 +299,9 @@ class GredoEngine:
         p = self.plan(q)
         naive = physical.build_gcdi(self.db, p, mode=self.mode)
         dag, report = self._lower(naive)
+        opt_dag = dag
         dag, shard_rt = self._shard_plan(dag)
+        self._debug_verify(naive, opt_dag, dag)
         ctx = physical.ExecContext(self.db, trace=trace,
                                    fence_device=self._fence_device(),
                                    shard=shard_rt)
@@ -270,13 +332,20 @@ class GredoEngine:
         naive = self.physical_plan(q)
         dag, report = self._lower(naive)
         if report is None:
-            return physical.explain(naive, db=self.db)
-        lines = ["== naive DAG (pre-rewrite) ==",
-                 physical.explain(naive, db=self.db),
-                 "== optimized DAG (post-rewrite) ==",
-                 physical.explain(dag, db=self.db),
-                 "== rewrites =="]
-        lines += ["  " + n for n in report.notes()]
+            lines = [physical.explain(naive, db=self.db)]
+        else:
+            lines = ["== naive DAG (pre-rewrite) ==",
+                     physical.explain(naive, db=self.db),
+                     "== optimized DAG (post-rewrite) ==",
+                     physical.explain(dag, db=self.db),
+                     "== rewrites =="]
+            lines += ["  " + n for n in report.notes()]
+        if self.debug:
+            vr = self._verify_stages(naive, dag if dag is not naive else None,
+                                     None)
+            lines.append("== verify ==")
+            lines += (["  " + l for l in vr.render()]
+                      or ["  verify: plan ok (no violations)"])
         return "\n".join(lines)
 
     def explain_last(self, top: int = 0) -> str:
@@ -298,6 +367,10 @@ class GredoEngine:
         if self.last_report is not None:
             lines.append("== rewrites ==")
             lines += ["  " + n for n in self.last_report.notes()]
+        if self.debug and self.last_verify is not None:
+            lines.append("== verify ==")
+            lines += (["  " + l for l in self.last_verify.render()]
+                      or ["  verify: plan ok (no violations)"])
         if self.last_interbuffer_delta:
             d = self.last_interbuffer_delta
             lines.append("interbuffer (this query): "
@@ -402,7 +475,9 @@ class GredoEngine:
         naive = physical.build_gcdia(self.db, p, task, mode=self.mode,
                                      use_kernel=use_kernel, iters=iters)
         dag, report = self._lower(naive)
+        opt_dag = dag
         dag, shard_rt = self._shard_plan(dag)
+        self._debug_verify(naive, opt_dag, dag)
         ests = physical.estimate(dag, self.db)
         ctx = physical.ExecContext(self.db, interbuffer=self.interbuffer,
                                    ests=ests, trace=trace,

@@ -43,6 +43,7 @@ from typing import Optional
 
 from . import cost as cost_mod
 from . import physical as ph
+from . import verify as verify_mod
 from .planner import _graph_join_side
 from .storage import Database
 
@@ -113,6 +114,9 @@ def optimize(root: ph.PhysicalOp, db: Database, cache: Optional[dict] = None,
     if merged:
         report.add("cse", f"unified {merged} duplicate subtree(s)")
     report.est_cost_after = _est_cost(root, db, cache)
+    # refresh the schema annotations the rewrites invalidated (pruned
+    # columns, re-sided semi-joins, replaced access paths)
+    verify_mod.annotate_out_cols(root, db)
     return root, report
 
 
@@ -434,33 +438,25 @@ def _select_match_path(root: ph.PhysicalOp, db: Database, report: OptReport,
     if g is None or g.delta.has_pending():
         return root
     p = mp.pplan
-    pat = p.pattern
-    chain = [pat.vertices[0].var] + [e.dst for e in pat.edges]
-    hop_order = chain[::-1] if p.reverse else chain
-    start = hop_order[0]
-    stbl = g.vertex_tables[pat.vertex(start).label]
-    n_start = float(stbl.nrows)
-    for pr in p.pushed.get(start, []):
-        n_start *= stbl.stats(pr.column).selectivity(pr)
     # peak padded-frontier estimate across hops (pre-predicate expansion —
-    # the kernel's capacity must hold every candidate before compaction)
-    peak = front = max(n_start, 1.0)
-    for v in hop_order[:-1]:
-        front *= g.hop_expansion(reverse=p.reverse,
-                                 label=pat.vertex(v).label)
-        peak = max(peak, front)
+    # the kernel's capacity must hold every candidate before compaction);
+    # shared with the static plan verifier, which re-derives the same bound
+    peak = cost_mod.device_frontier_peak(g, p)
     if peak > DEVICE_MAX_FRONTIER:
         report.add("access-path", f"{mp.graph}: pattern stays on host "
                    f"matcher (est peak frontier {peak:.3g} exceeds device "
                    f"budget {DEVICE_MAX_FRONTIER:.3g})")
         return root
-    need = max(int(peak * 2.0), 1)
-    cap = 1 << max(7, (need - 1).bit_length())
+    cap = cost_mod.padded_capacity(peak)
     cost_host = _est_cost(mp, db, cache)
     best = None
     for access in ("device-pallas", "device-jit"):
-        dm = ph.DeviceMatchPattern(mp.graph, g.epoch, p, access=access,
-                                   capacity=cap)
+        # the node embeds the graph's *catalog* write epoch (base + lineage
+        # carry), matching MatchPattern — g.epoch alone diverges after a
+        # graph is replaced via db.add_graph and would collide signatures
+        # across the replacement
+        dm = ph.DeviceMatchPattern(mp.graph, db.epoch_of(mp.graph), p,
+                                   access=access, capacity=cap)
         c = _est_cost(dm, db, cache)
         if best is None or c < best[0]:
             best = (c, dm)
@@ -506,6 +502,10 @@ def _prune_columns(leaves: list, db: Database, q, residual: list,
             continue
         pruned = ph.PruneCols(alias.children[0], tuple(sorted(need)))
         leaves[li] = alias.with_children(pruned)
+        # with_children carried the full-table out_cols over — narrow the
+        # annotation to the surviving columns or downstream passes (and the
+        # verifier's V-ANN check) see a stale schema
+        leaves[li].out_cols = frozenset(f"{alias.name}.{c}" for c in need)
         report.add("prune", f"{alias.name}: keep {sorted(need)} "
                             f"of {len(have)} column(s)")
     return leaves

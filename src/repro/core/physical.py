@@ -1060,6 +1060,12 @@ def build_gcdi(db: Database, p, mode: str = "gredo") -> PhysicalOp:
     epochs = tuple((n, db.epoch_of(n)) for n in q.source_names())
     root = Project(q.select, epochs, current)
     root.logical = p    # the optimizer rewrites against the logical plan
+
+    # full-coverage schema annotations: every relational node carries the
+    # statically inferred out_cols (not just cluster roots and aliases) —
+    # what the optimizer's pruning and the plan verifier read
+    from . import verify as verify_mod
+    verify_mod.annotate_out_cols(root, db)
     return root
 
 

@@ -212,7 +212,12 @@ def prepare_plan(root: "physical_mod.PhysicalOp", db: Database, k: int
         memo[id(n)] = m
         return m
 
-    return rewrite(root), k_eff
+    new_root = rewrite(root)
+    # re-stamp schema annotations on the rewritten DAG (the inserted
+    # Exchange nodes carry none; with_children clones keep stale refs)
+    from . import verify as verify_mod
+    verify_mod.annotate_out_cols(new_root, db)
+    return new_root, k_eff
 
 
 # ---------------------------------------------------------------------------
