@@ -1,7 +1,7 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test verify test-fast lint verify-plans bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace bench-kernels bench-shard
+.PHONY: test verify test-fast lint verify-plans bench-smoke bench bench-update bench-gcdia bench-optimizer bench-index bench-trace bench-kernels bench-shard bench-regression
 
 # tier-1 verification (the full suite — unchanged)
 test:
@@ -69,6 +69,15 @@ bench-trace:
 # batched point-lookup throughput, per-kernel roofline attribution
 bench-kernels:
 	python -m benchmarks.run --suite kernels
+
+# perf-regression gate: re-measure the paper's headline suites (GCDI/GCDA
+# ablations, inter-buffer reuse) and compare against the committed
+# noise-aware baselines in experiments/bench_baselines.json; exits non-zero
+# on any metric outside its tolerance band. Re-baseline with
+# `python -m benchmarks.regression --update-baseline` only for accepted
+# perf changes.
+bench-regression:
+	python -m benchmarks.regression --fast
 
 # sharded morsel-parallel execution: single-stream vs 4-shard cold latency
 # on the scan/join-heavy GCDIA (bit-for-bit checked), the born-sharded

@@ -1,0 +1,295 @@
+"""Perf-regression gate: noise-aware committed baselines for the paper
+suites.
+
+The bench trajectory problem: ``experiments/bench_results.json`` is
+overwritten per run and nothing gates on it, so a PR can silently erode the
+speedups the repo exists to demonstrate. This module maintains
+``experiments/bench_baselines.json`` — per-metric medians with tolerance
+bands — and fails ``make bench-regression`` when a fresh measurement falls
+outside its band.
+
+Noise handling, by metric *kind*:
+
+- ``seconds`` — absolute wall time. Machine-dependent (a CI runner is not
+  the box that wrote the baseline), so the tolerance floor is generous
+  (100%: only a >2x slowdown trips on seconds alone).
+- ``ratio`` — machine-independent speedups (gredo vs single/dual, batch vs
+  volcano, warm vs cold). These are the paper's claims and the gate's
+  teeth: a regression that slows gredo *relative to its ablations* trips
+  here even when absolute seconds stay inside their loose band. Ratios
+  must not *drop* below ``median * (1 - tol)``.
+- ``count`` — deterministic operation counts (record fetches). Near-exact
+  (2% floor): an I/O regression is a plan change, not noise.
+
+Per-metric tolerance = ``max(kind floor, 3 * observed relative spread)``
+over the baseline's median-of-k samples, so metrics that are noisy *on the
+baseline machine* get proportionally wider bands.
+
+Usage::
+
+    python -m benchmarks.regression --fast              # gate (exit 1 on regression)
+    python -m benchmarks.regression --update-baseline   # re-baseline (accepted perf change)
+    python -m benchmarks.regression --fast --inject-slowdown 0.05
+                                                        # self-test: gate must trip
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+BASELINE_PATH = "experiments/bench_baselines.json"
+
+# metric kind -> tolerance floor (relative)
+TOL_FLOORS = {"seconds": 1.00, "ratio": 0.40, "count": 0.02}
+TOL_CAP = 4.0
+
+# table -> (identity fields, {metric field: kind}). Only the suites the
+# fast gate runs; identity fields order the metric names deterministically.
+SUITE_SPECS = {
+    "gcdi_ablation": (("query",), {
+        "gredo_s": "seconds",
+        "speedup_vs_single": "ratio",
+        "speedup_vs_dual": "ratio",
+        "gredo_io": "count",
+        "single_io": "count",
+    }),
+    "graph_workloads": (("query",), {
+        "gredo_s": "seconds",
+    }),
+    "gcda_ablation": (("task",), {
+        "batch_s": "seconds",
+        "speedup": "ratio",
+    }),
+    "interbuffer_reuse": ((), {
+        "cold_s": "seconds",
+        "warm_s": "seconds",
+        "reuse_speedup": "ratio",
+    }),
+}
+
+
+def metrics_from_rows(rows: list[dict]) -> dict:
+    """Flatten suite rows into ``{metric_name: (value, kind)}``; rows of
+    tables without a spec are ignored."""
+    out: dict[str, tuple[float, str]] = {}
+    for r in rows:
+        spec = SUITE_SPECS.get(r.get("table"))
+        if spec is None:
+            continue
+        id_fields, fields = spec
+        ident = ".".join([str(r["table"])]
+                         + [str(r[k]) for k in id_fields if k in r])
+        for field, kind in fields.items():
+            v = r.get(field)
+            if isinstance(v, (int, float)):
+                out[f"{ident}.{field}"] = (float(v), kind)
+    return out
+
+
+def _suite_rows(sf: int) -> list[dict]:
+    """One measurement pass over the gated suites (the paper's headline
+    tables: GCDI ablation, GCDA ablation, inter-buffer reuse)."""
+    from . import m2bench_suite as m2
+    rows = list(m2.graph_workloads(sf=sf))
+    rows += m2.gcda_ablation(sf=sf)
+    rows += m2.interbuffer_reuse(sf=sf)
+    return rows
+
+
+class _Slowdown:
+    """Test hook: monkeypatch ``GredoEngine.query`` with a sleep that fires
+    only in gredo mode, so both the absolute-seconds and the
+    speedup-vs-ablation ratio metrics regress — exactly what a real
+    gredo-path regression looks like."""
+
+    def __init__(self, seconds: float):
+        from repro.core.engine import GredoEngine
+        self.cls = GredoEngine
+        self.orig = GredoEngine.query
+        self.seconds = seconds
+
+        def slow_query(eng, q, _orig=self.orig, _s=seconds):
+            if eng.mode == "gredo":
+                time.sleep(_s)
+            return _orig(eng, q)
+
+        GredoEngine.query = slow_query
+
+    def undo(self) -> None:
+        self.cls.query = self.orig
+
+
+def measure(sf: int = 1, repeat: int = 3,
+            slowdown: float = 0.0) -> list[dict]:
+    """``repeat`` independent passes over the gated suites, each flattened
+    to a metrics dict. The gate compares per-metric *medians* of these
+    samples, the baseline records their spread. A discarded warmup pass
+    runs first: the initial pass in a fresh process pays one-time jit
+    compilation (10x+ on the GCDA batch operators), which is compile cost,
+    not the execution perf this gate protects."""
+    patch = _Slowdown(slowdown) if slowdown > 0 else None
+    try:
+        _suite_rows(sf)
+        return [metrics_from_rows(_suite_rows(sf)) for _ in range(repeat)]
+    finally:
+        if patch is not None:
+            patch.undo()
+
+
+def build_baseline(samples: list[dict], sf: int = 1) -> dict:
+    """Median-of-k baseline with per-metric tolerance bands."""
+    names: dict[str, str] = {}
+    for s in samples:
+        for k, (_, kind) in s.items():
+            names[k] = kind
+    metrics = {}
+    for name in sorted(names):
+        vals = [s[name][0] for s in samples if name in s]
+        kind = names[name]
+        med = statistics.median(vals)
+        spread = ((max(vals) - min(vals)) / max(abs(med), 1e-12)
+                  if len(vals) > 1 else 0.0)
+        tol = min(max(TOL_FLOORS[kind], 3.0 * spread), TOL_CAP)
+        metrics[name] = {"value": round(med, 9), "kind": kind,
+                         "tol": round(tol, 4),
+                         "samples": [round(v, 9) for v in vals]}
+    return {"version": 1, "sf": sf, "k": len(samples), "metrics": metrics}
+
+
+def update_baseline(row_samples: list[list[dict]], sf: int = 1,
+                    path: str = BASELINE_PATH) -> str:
+    """Build a baseline from raw suite-row samples and merge it into
+    ``path`` (existing metrics not re-measured are preserved). This is the
+    entry point ``benchmarks.run --save-baseline`` uses."""
+    samples = [metrics_from_rows(rows) for rows in row_samples]
+    return update_baseline_from_samples(samples, sf, path)
+
+
+def compare(fresh: dict, baseline: dict) -> tuple[list[str], list[str]]:
+    """Fresh ``{name: (value, kind)}`` medians vs the committed baseline.
+    Returns ``(regressions, notes)`` — non-empty regressions fail the gate.
+    Higher-is-better ratios regress downward; seconds/counts upward. A
+    baselined metric that vanished is a regression too (silent coverage
+    loss); new unbaselined metrics are a note (run --update-baseline)."""
+    regressions: list[str] = []
+    notes: list[str] = []
+    base_metrics = baseline.get("metrics", {})
+    for name, spec in sorted(base_metrics.items()):
+        base, tol, kind = spec["value"], spec["tol"], spec["kind"]
+        if name not in fresh:
+            regressions.append(f"{name}: baselined but not measured "
+                               f"(metric vanished — re-baseline if intended)")
+            continue
+        v = fresh[name][0]
+        if kind == "ratio":
+            bound = base * (1.0 - tol)
+            if v < bound:
+                regressions.append(
+                    f"{name}: {v:.4g} < {bound:.4g} "
+                    f"(baseline {base:.4g}, tol {tol:.0%}) [ratio dropped]")
+        else:
+            bound = base * (1.0 + tol)
+            if v > bound:
+                regressions.append(
+                    f"{name}: {v:.4g} > {bound:.4g} "
+                    f"(baseline {base:.4g}, tol {tol:.0%}) [{kind} grew]")
+    for name in sorted(fresh):
+        if name not in base_metrics:
+            notes.append(f"{name}: not baselined yet "
+                         f"(value {fresh[name][0]:.4g})")
+    return regressions, notes
+
+
+def _median_sample(samples: list[dict]) -> dict:
+    out: dict[str, tuple[float, str]] = {}
+    names: dict[str, str] = {}
+    for s in samples:
+        for k, (_, kind) in s.items():
+            names[k] = kind
+    for name, kind in names.items():
+        vals = [s[name][0] for s in samples if name in s]
+        out[name] = (statistics.median(vals), kind)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sf", type=int, default=1)
+    ap.add_argument("--fast", action="store_true",
+                    help="single measurement pass (repeat=1); the committed "
+                         "baseline's tolerance bands absorb the extra noise")
+    ap.add_argument("--repeat", type=int, default=0,
+                    help="measurement passes (default: 3, or 1 with --fast)")
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-measure and rewrite the baseline instead of "
+                         "gating (use only for accepted perf changes)")
+    ap.add_argument("--inject-slowdown", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="self-test: sleep this long inside every "
+                         "gredo-mode query; the gate is expected to trip")
+    args = ap.parse_args()
+    repeat = args.repeat or (1 if args.fast else 3)
+
+    t0 = time.perf_counter()
+    samples = measure(sf=args.sf, repeat=repeat,
+                      slowdown=args.inject_slowdown)
+    dt = time.perf_counter() - t0
+    print(f"# measured {len(samples[0])} metrics x {repeat} passes "
+          f"in {dt:.1f}s", file=sys.stderr)
+
+    if args.update_baseline:
+        path = update_baseline_from_samples(samples, args.sf, args.baseline)
+        print(f"baseline updated -> {path}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"error: no baseline at {args.baseline} — seed it with "
+              f"`python -m benchmarks.regression --update-baseline`",
+              file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    fresh = _median_sample(samples)
+    regressions, notes = compare(fresh, baseline)
+    for n in notes:
+        print(f"NOTE  {n}")
+    checked = sum(1 for name in baseline.get("metrics", {}) if name in fresh)
+    if regressions:
+        for r in regressions:
+            print(f"REGRESSION  {r}")
+        print(f"FAIL: {len(regressions)} regression(s) across "
+              f"{checked} gated metrics")
+        return 1
+    print(f"OK: {checked} gated metrics within tolerance "
+          f"({len(notes)} unbaselined)")
+    return 0
+
+
+def update_baseline_from_samples(samples: list[dict], sf: int,
+                                 path: str) -> str:
+    """Write/merge a baseline doc from flattened metric samples: freshly
+    measured metrics replace their old entries, metrics this run didn't
+    cover (other suites) are preserved."""
+    doc = build_baseline(samples, sf=sf)
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            merged = dict(old.get("metrics", {}))
+            merged.update(doc["metrics"])
+            doc["metrics"] = dict(sorted(merged.items()))
+        except (ValueError, OSError):
+            pass
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -97,9 +97,20 @@ def _shard_suite(sf: int, fast: bool) -> list[dict]:
     return rows
 
 
+def _row_key(r: dict) -> tuple:
+    """Stable identity of a bench row (table + whichever discriminator
+    fields it carries) — the merged results file is sorted by this, so its
+    order no longer depends on which suites ran in which sessions and
+    baseline diffs stay reviewable."""
+    return tuple(str(r.get(k, "")) for k in
+                 ("table", "query", "task", "step", "kernel", "op", "mode",
+                  "name", "sf", "n_batches", "selectivity"))
+
+
 def _save(all_rows: list[dict]) -> None:
     """Merge into experiments/bench_results.json: rows of the tables just
-    measured replace their previous records; other suites' rows persist."""
+    measured replace their previous records; other suites' rows persist.
+    The merged file is written in deterministic (_row_key) order."""
     os.makedirs("experiments", exist_ok=True)
     path = "experiments/bench_results.json"
     fresh_tables = {r.get("table") for r in all_rows}
@@ -112,8 +123,22 @@ def _save(all_rows: list[dict]) -> None:
         except (ValueError, OSError):
             kept = []
     with open(path, "w") as f:
-        json.dump(kept + all_rows, f, indent=1, default=str)
+        json.dump(sorted(kept + all_rows, key=_row_key), f, indent=1,
+                  default=str)
     print(f"# full records -> {path}", file=sys.stderr)
+
+
+def _finish(all_rows: list[dict], args) -> None:
+    """Common exit path for every suite: persist, then the machine-readable
+    surfaces (--json rows to stdout, --save-baseline into the perf gate's
+    committed baseline file)."""
+    _save(all_rows)
+    if args.json:
+        print(json.dumps(sorted(all_rows, key=_row_key), default=str))
+    if args.save_baseline:
+        from . import regression
+        path = regression.update_baseline([all_rows])
+        print(f"# baselines -> {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -138,6 +163,13 @@ def main() -> None:
                          "shard: morsel-parallel execution — single-stream "
                          "vs 4-shard latency, born-sharded GCDA handoff, "
                          "small-input serial gate")
+    ap.add_argument("--json", action="store_true",
+                    help="also print the measured rows as one JSON array on "
+                         "stdout (machine-readable; the CSV lines stay)")
+    ap.add_argument("--save-baseline", action="store_true",
+                    help="write/update experiments/bench_baselines.json "
+                         "from this run's rows (the perf-regression gate's "
+                         "committed reference; see benchmarks.regression)")
     args = ap.parse_args()
 
     from . import m2bench_suite as m2
@@ -149,43 +181,43 @@ def main() -> None:
     if args.suite in ("optimizer", "all"):
         all_rows += _optimizer_suite(sf=args.sf, fast=args.fast)
         if args.suite == "optimizer":
-            _save(all_rows)
+            _finish(all_rows, args)
             return
 
     if args.suite in ("index", "all"):
         all_rows += _index_suite(sf=args.sf, fast=args.fast)
         if args.suite == "index":
-            _save(all_rows)
+            _finish(all_rows, args)
             return
 
     if args.suite in ("trace", "all"):
         all_rows += _trace_suite(sf=args.sf, fast=args.fast)
         if args.suite == "trace":
-            _save(all_rows)
+            _finish(all_rows, args)
             return
 
     if args.suite in ("kernels", "all"):
         all_rows += _kernels_suite(sf=args.sf, fast=args.fast)
         if args.suite == "kernels":
-            _save(all_rows)
+            _finish(all_rows, args)
             return
 
     if args.suite in ("shard", "all"):
         all_rows += _shard_suite(sf=args.sf, fast=args.fast)
         if args.suite == "shard":
-            _save(all_rows)
+            _finish(all_rows, args)
             return
 
     if args.suite in ("gcdia", "all"):
         all_rows += _gcdia_suite(sf=args.sf)
         if args.suite == "gcdia":
-            _save(all_rows)
+            _finish(all_rows, args)
             return
 
     if args.suite in ("update", "all"):
         all_rows += _update_suite(fast=args.fast)
         if args.suite == "update":
-            _save(all_rows)
+            _finish(all_rows, args)
             return
 
     # Figs. 7-8 + Fig. 10: GCDI ablation & graph workloads
@@ -231,7 +263,7 @@ def main() -> None:
         print(f"kernel_{r['kernel'].split('(')[0]},{r['oracle_s']*1e6:.1f},"
               f"{d}block={r['tpu_block']}")
 
-    _save(all_rows)
+    _finish(all_rows, args)
 
 
 if __name__ == "__main__":

@@ -62,8 +62,7 @@ def update_throughput(n_vertices: int = 20_000, n_edges: int = 100_000,
     probe = np.random.default_rng(9).integers(0, n_vertices, 256)
 
     # --- delta path -------------------------------------------------------
-    g = _mk_graph(n_vertices, n_edges)
-    deltastore.WRITE_COUNTERS.reset()
+    g = _mk_graph(n_vertices, n_edges)     # fresh graph: counters start at 0
     base_fwd = g.fwd
     t0 = time.perf_counter()
     for i, m in enumerate(mutations):
@@ -72,7 +71,7 @@ def update_throughput(n_vertices: int = 20_000, n_edges: int = 100_000,
             g.delete_edges(np.arange(i * deletes_per_batch,
                                      (i + 1) * deletes_per_batch))
     t_delta_writes = time.perf_counter() - t0
-    c = deltastore.WRITE_COUNTERS
+    c = g.write_counters
     total_rows = n_batches * (batch + deletes_per_batch)
     # acceptance: no O(V+E) work on the hot path ---------------------------
     assert c.compact_ops == 0 and c.compactions == 0, \
@@ -129,13 +128,12 @@ def compaction_amortization(n_vertices: int = 20_000, n_edges: int = 100_000,
                             batch: int = 1_000, n_batches: int = 60) -> list[dict]:
     """Delta path with the default auto-compaction policy: total cost stays
     amortized even when the policy fires mid-stream."""
-    g = _mk_graph(n_vertices, n_edges)
-    deltastore.WRITE_COUNTERS.reset()
+    g = _mk_graph(n_vertices, n_edges)     # fresh graph: counters start at 0
     t0 = time.perf_counter()
     for m in _batches(n_vertices, batch, n_batches, seed=2):
         g.insert_edges(m)
     elapsed = time.perf_counter() - t0
-    c = deltastore.WRITE_COUNTERS
+    c = g.write_counters
     return [{
         "table": "compaction_amortization", "n_batches": n_batches,
         "batch": batch, "total_s": elapsed,

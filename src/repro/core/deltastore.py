@@ -64,43 +64,10 @@ class WriteCounters:
         self.__init__()
 
 
-class _RegistryWriteCounters:
-    """Deprecated process-global view of write activity. Historically this
-    module kept one ``WriteCounters`` singleton, which leaked state across
-    ``Database`` instances and tests; counters now live per graph. This alias
-    keeps the old read/``reset()`` API working by delegating to the
-    ``deltastore.*`` counters of ``telemetry.default_registry()``, which every
-    graph mirrors its charges into. New code should read
-    ``graph.write_counters`` or a registry snapshot instead."""
-
-    def _counter(self, field: str):
-        from .telemetry import default_registry
-        return default_registry().counter(f"deltastore.{field}")
-
-    def __getattr__(self, name: str):
-        if name in WRITE_COUNTER_FIELDS:
-            return self._counter(name).value
-        raise AttributeError(name)
-
-    def __setattr__(self, name: str, value) -> None:
-        if name in WRITE_COUNTER_FIELDS:
-            self._counter(name).value = value
-        else:
-            object.__setattr__(self, name, value)
-
-    def bump(self, **ops) -> None:
-        for k, v in ops.items():
-            self._counter(k).value += v
-
-    def metrics(self) -> dict:
-        return {f: getattr(self, f) for f in WRITE_COUNTER_FIELDS}
-
-    def reset(self) -> None:
-        for f in WRITE_COUNTER_FIELDS:
-            self._counter(f).value = 0
-
-
-WRITE_COUNTERS = _RegistryWriteCounters()
+# Write counters live per graph (``Graph.write_counters``); engines expose
+# them through the registry as ``deltastore.<graph>.<field>``. The former
+# process-global ``WRITE_COUNTERS`` alias is gone — it leaked state across
+# Database instances and tests.
 
 
 # ---------------------------------------------------------------------------

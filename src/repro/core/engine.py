@@ -24,6 +24,7 @@ from typing import Optional
 import numpy as np
 
 from . import join as join_mod, optimizer as optimizer_mod
+from . import observe as observe_mod
 from . import pattern as pattern_mod, physical, planner
 from . import telemetry as telemetry_mod
 from . import verify as verify_mod
@@ -84,7 +85,8 @@ class GredoEngine:
                  join_enum: str = "dp",
                  telemetry: "bool | telemetry_mod.Telemetry | None" = None,
                  n_shards: int = 1,
-                 debug: bool = False):
+                 debug: bool = False,
+                 observe: "bool | observe_mod.FlightRecorder" = True):
         assert mode in ("gredo", "dual", "single")
         assert join_enum in ("dp", "dp-leftdeep", "greedy")
         self.db = db
@@ -116,7 +118,19 @@ class GredoEngine:
         self.last_naive_dag: Optional[physical.PhysicalOp] = None
         self._last_ests: Optional[dict] = None
         self.last_report: Optional[optimizer_mod.OptReport] = None
-        # observability (off by default — the hot path then only pays
+        # flight recorder (repro.core.observe): always-on bounded ring of
+        # recent query records with trigger-driven auto-dump; pass a shared
+        # FlightRecorder to pool SLO state across engines, or observe=False
+        # to opt out entirely. Built before telemetry so enable_telemetry
+        # can register it as the `flight` registry source.
+        self.observer: Optional[observe_mod.FlightRecorder] = None
+        if observe:
+            self.observer = (observe
+                             if isinstance(observe, observe_mod.FlightRecorder)
+                             else observe_mod.FlightRecorder())
+        self._recorder: Optional[observe_mod.WorkloadRecorder] = None
+        self._last_label = ""
+        # telemetry (off by default — the hot path then only pays
         # `trace is None` checks). `telemetry=True` builds a fresh session;
         # passing a Telemetry instance shares a registry across engines.
         self.telemetry: Optional[telemetry_mod.Telemetry] = None
@@ -130,14 +144,10 @@ class GredoEngine:
         self._pre_snapshot: dict = {}
 
     # ------------------------------------------------------------- telemetry
-    def enable_telemetry(self, session: Optional["telemetry_mod.Telemetry"]
-                         = None) -> "telemetry_mod.Telemetry":
-        """Attach (or build) a telemetry session and register this engine's
-        subsystems as registry sources: inter-buffer admission, per-graph
-        delta-store write counters, and secondary-index maintenance."""
-        tel = session if session is not None else telemetry_mod.Telemetry()
-        reg = tel.registry
-        reg.register_source("interbuffer", self.interbuffer.metrics)
+    def _metric_sources(self) -> dict:
+        """The subsystem pull-sources this engine exposes, namespace -> fn.
+        ``enable_telemetry`` registers them on the session registry;
+        ``metrics_snapshot`` reads them directly when telemetry is off."""
         db = self.db
 
         def _graph_writes() -> dict:
@@ -151,18 +161,68 @@ class GredoEngine:
             im = getattr(db, "_index_manager", None)
             return im.metrics() if im is not None else {}
 
-        reg.register_source("deltastore", _graph_writes)
-        reg.register_source("index", _index_counters)
-        from . import pattern_jit
-        reg.register_source("traversal_kernels", pattern_jit.metrics)
-
         def _shard_metrics() -> dict:
             rt = self._shard_runtime
             return rt.metrics() if rt is not None else {}
 
-        reg.register_source("shard", _shard_metrics)
+        from . import pattern_jit
+        sources = {"interbuffer": self.interbuffer.metrics,
+                   "deltastore": _graph_writes,
+                   "index": _index_counters,
+                   "traversal_kernels": pattern_jit.metrics,
+                   "shard": _shard_metrics}
+        if self.observer is not None:
+            sources["flight"] = self.observer.metrics
+        return sources
+
+    def enable_telemetry(self, session: Optional["telemetry_mod.Telemetry"]
+                         = None) -> "telemetry_mod.Telemetry":
+        """Attach (or build) a telemetry session and register this engine's
+        subsystems as registry sources: inter-buffer admission, per-graph
+        delta-store write counters, secondary-index maintenance, traversal
+        kernels, shard runtime, and the flight recorder."""
+        tel = session if session is not None else telemetry_mod.Telemetry()
+        for ns, fn in self._metric_sources().items():
+            tel.registry.register_source(ns, fn)
         self.telemetry = tel
         return tel
+
+    def metrics_snapshot(self) -> dict:
+        """Flat ``ns.key -> number`` view of every subsystem metric. With a
+        telemetry session attached this is the registry snapshot (includes
+        engine counters/histograms and q-error figures); without one it
+        reads the subsystem sources directly — health checks work either
+        way."""
+        if self.telemetry is not None:
+            return self.telemetry.registry.snapshot()
+        out: dict[str, float] = {}
+        for ns, fn in self._metric_sources().items():
+            for k, v in fn().items():
+                out[f"{ns}.{k}"] = v
+        return out
+
+    def health(self) -> "observe_mod.HealthReport":
+        """Evaluate the observability rule table (repro.core.observe) over
+        the current metrics snapshot and the flight recorder's latency
+        EWMAs. With telemetry attached, the verdicts are also exported as
+        ``health.*`` gauges (0=ok 1=warn 2=critical) so OpenMetrics scrapes
+        carry them."""
+        report = observe_mod.evaluate_health(self.metrics_snapshot(),
+                                             self.observer)
+        if self.telemetry is not None:
+            for k, v in report.as_metrics().items():
+                self.telemetry.registry.gauge(k).set(v)
+        return report
+
+    def record(self, path: str) -> "observe_mod.WorkloadRecorder":
+        """Capture this engine's interleaved query/mutation stream to JSONL
+        for deterministic offline replay::
+
+            with eng.record("experiments/workload.jsonl"):
+                eng.query(q); g.insert_edges(rows); eng.analyze(task)
+            observe.replay(fresh_db, "experiments/workload.jsonl")
+        """
+        return observe_mod.WorkloadRecorder(self, path)
 
     def profile(self, q: "Query | GCDIATask", **kw) -> Profile:
         """Run one GCDI query / GCDIA task with tracing on (temporarily
@@ -273,6 +333,11 @@ class GredoEngine:
         report = self._verify_stages(naive, dag if dag is not naive else None,
                                      final if final is not dag else None)
         if not report.ok:
+            if self.observer is not None:
+                # capture the failing plan + report before the exception
+                # unwinds (the query never reaches _finish_query)
+                self.observer.record_verify_error(self, self._last_label,
+                                                  naive, report)
             raise verify_mod.PlanVerificationError(report)
 
     def _shard_plan(self, dag: physical.PhysicalOp
@@ -323,6 +388,8 @@ class GredoEngine:
             rewrites=report.notes() if report else [])
         self._attach_delta_stats(q)
         self._finish_query(trace, ctx, ib0)
+        if self._recorder is not None:
+            self._recorder.log_query(q, result, self.last_stats.seconds)
         return result
 
     def explain(self, q: Query) -> str:
@@ -395,6 +462,9 @@ class GredoEngine:
         if self.telemetry is not None and self.telemetry.qerror.last_plan:
             lines.append("== q-error flags ==")
             lines += [f"  {m!r}" for m in self.telemetry.qerror.last_plan]
+        if self.observer is not None:
+            lines.append("== health ==")
+            lines += ["  " + l for l in self.health().render()]
         return "\n".join(lines)
 
     def _attach_delta_stats(self, q: Query) -> None:
@@ -409,9 +479,12 @@ class GredoEngine:
 
     def _begin_query(self, label: str):
         """Open the per-query observability window: an inter-buffer counter
-        snapshot (always — 6 ints), and with telemetry on, a registry
-        snapshot plus a fresh trace."""
+        snapshot (always — 6 ints), the flight recorder's pre-query marks,
+        and with telemetry on, a registry snapshot plus a fresh trace."""
         ib0 = self.interbuffer.metrics()
+        self._last_label = label
+        if self.observer is not None:
+            self.observer.begin(label)
         tel = self.telemetry
         if tel is None:
             return None, ib0
@@ -420,11 +493,16 @@ class GredoEngine:
         return tel.collector.start_query(label), ib0
 
     def _finish_query(self, trace, ctx: physical.ExecContext,
-                      ib0: dict) -> None:
+                      ib0: dict, kind: str = "query") -> None:
         self.last_interbuffer_delta = telemetry_mod.Registry.delta(
             ib0, self.interbuffer.metrics())
         tel = self.telemetry
         if tel is None:
+            # flight-recorder capture happens even without telemetry — the
+            # record then carries plan fingerprint + operator stats +
+            # inter-buffer delta (no span tree / registry delta).
+            if self.observer is not None:
+                self.observer.observe(self, kind=kind)
             return
         seconds = self.last_stats.seconds
         if trace is not None:
@@ -459,6 +537,8 @@ class GredoEngine:
         walk(self.last_dag)
         self.last_registry_delta = telemetry_mod.Registry.delta(
             self._pre_snapshot, reg.snapshot())
+        if self.observer is not None:
+            self.observer.observe(self, kind=kind)
 
     # ------------------------------------------------------------------ GCDA
     def analyze(self, task: GCDIATask, *, use_kernel: bool | None = None,
@@ -500,7 +580,11 @@ class GredoEngine:
             rewrites=report.notes() if report else [],
             nodes_reused=ctx.nodes_reused)
         self._attach_delta_stats(task.integration)
-        self._finish_query(trace, ctx, ib0)
+        self._finish_query(trace, ctx, ib0, kind="analyze")
+        if self._recorder is not None:
+            self._recorder.log_analyze(task, out, iters=iters,
+                                       use_kernel=use_kernel,
+                                       seconds=self.last_stats.seconds)
         return out
 
     # ------------------------------------------------------- graph utilities

@@ -1524,6 +1524,15 @@ def estimate(root: PhysicalOp, db: Database,
     return {nid: (rows_of[nid], cumulative(m)) for nid, m in nodes.items()}
 
 
+def plan_fingerprint(root: PhysicalOp) -> str:
+    """Stable 16-hex identity of a plan, derived from the root signature.
+    Signatures embed source write-epochs, so the same template re-planned
+    after a mutation fingerprints differently — exactly the identity the
+    flight recorder wants (a record names *this* plan against *this* data
+    version, not the query template)."""
+    return fingerprint(root.signature())
+
+
 def collect_stats(root: PhysicalOp) -> list[dict]:
     """Flatten per-operator stats (pre-order, shared nodes once)."""
     out: list[dict] = []

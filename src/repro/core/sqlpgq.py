@@ -28,7 +28,8 @@ _TOKEN = re.compile(r"""
     | (?P<word>[A-Za-z_][\w.]*)
     )""", re.X)
 
-KEYWORDS = {"SELECT", "FROM", "MATCH", "WHERE", "ON", "AND", "BETWEEN", "IN"}
+KEYWORDS = frozenset(
+    {"SELECT", "FROM", "MATCH", "WHERE", "ON", "AND", "BETWEEN", "IN"})
 
 
 def _tokenize(text: str):

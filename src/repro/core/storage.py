@@ -752,6 +752,9 @@ class Graph:
         self.compactions = 0
         self.last_compact_seconds = 0.0
         self.write_counters = deltastore.WriteCounters()
+        # mutation listeners: fn(graph, op, payload) called after each
+        # successful write (workload capture — see repro.core.observe)
+        self.listeners: list = []
         self.delta_config = delta_config or deltastore.DeltaConfig()
         self._set_base(dict(vertex_tables), edges)
 
@@ -948,12 +951,13 @@ class Graph:
 
     # ---- updates (paper §4.4 staged insertion, LSM-buffered) ----
     def _charge_write(self, **ops) -> None:
-        """Charge write/compaction cost to this graph's counters and mirror
-        into the process-global registry (the deprecated module-level
-        ``deltastore.WRITE_COUNTERS`` view reads the latter)."""
-        from . import deltastore
+        """Charge write/compaction cost to this graph's counters (surfaced
+        through the registry as ``deltastore.<graph>.<field>``)."""
         self.write_counters.bump(**ops)
-        deltastore.WRITE_COUNTERS.bump(**ops)
+
+    def _notify(self, op: str, payload: dict) -> None:
+        for fn in self.listeners:
+            fn(self, op, payload)
 
     def insert_vertices(self, label: str, rows: dict[str, np.ndarray]) -> None:
         """Vertex-only batch insertion: records buffered (RecordAM deferred
@@ -977,6 +981,7 @@ class Graph:
         self._vvo.append(np.arange(vid0, vid0 + n_new, dtype=np.int64))
         self.epoch += 1
         self._charge_write(write_batches=1, write_rows=n_new, write_ops=n_new)
+        self._notify("insert_vertices", {"label": label, "rows": cols})
         self._maybe_compact()
 
     def insert_edges(self, rows: dict[str, np.ndarray]) -> None:
@@ -1001,6 +1006,7 @@ class Graph:
         self._charge_write(
             write_batches=1, write_rows=n_new,
             write_ops=n_new * max(int(np.ceil(np.log2(max(n_new, 2)))), 1))
+        self._notify("insert_edges", {"rows": cols})
         self._maybe_compact()
 
     def delete_edges(self, edge_tids: np.ndarray) -> None:
@@ -1015,6 +1021,7 @@ class Graph:
         self.epoch += 1
         self._charge_write(write_batches=1, write_rows=fresh,
                            write_ops=len(tids))
+        self._notify("delete_edges", {"edge_tids": tids})
         self._maybe_compact()
 
     # ---- compaction (the amortized rebuild) ----
@@ -1209,6 +1216,9 @@ class Database:
         self.graphs: dict[str, Graph] = {}
         self._table_epochs: dict[str, int] = {}
         self._index_manager = None      # created lazily by ``indexes``
+        # mutation listeners: fn(op, name) called on touch_table (workload
+        # capture — see repro.core.observe)
+        self.listeners: list = []
 
     @property
     def indexes(self):
@@ -1238,6 +1248,8 @@ class Database:
         """Signal an in-place mutation of a relational/document collection
         (bumps its epoch so dependent cached GCDA results are invalidated)."""
         self._table_epochs[name] = self._table_epochs.get(name, 0) + 1
+        for fn in self.listeners:
+            fn("touch_table", name)
 
     def epoch_of(self, name: str) -> int:
         """Write epoch of a collection. Graphs track their own epoch; the

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
 import threading
 import time
 from typing import Any, Callable, Optional
@@ -148,6 +149,13 @@ class Histogram:
         return self.percentile(99)
 
     def summary(self) -> dict:
+        if self.count == 0:
+            # finite zeros, never NaN: empty histograms flow through
+            # snapshots into JSON dumps / OpenMetrics text, where NaN is
+            # invalid. `percentile()` itself keeps returning NaN — "no
+            # observations" and "p99 == 0.0" are different claims.
+            return {"count": 0, "sum": 0.0, "p50": 0.0, "p95": 0.0,
+                    "p99": 0.0}
         return {"count": self.count, "sum": self.sum,
                 "p50": self.p50, "p95": self.p95, "p99": self.p99}
 
@@ -253,6 +261,59 @@ class Registry:
         for m in metrics:
             m.reset()
 
+    @staticmethod
+    def _om_name(name: str) -> str:
+        """Metric-name sanitizer for the OpenMetrics grammar:
+        ``[a-zA-Z_:][a-zA-Z0-9_:]*`` — dots and slashes become
+        underscores."""
+        n = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+        return n if re.match(r"[a-zA-Z_:]", n) else "_" + n
+
+    @staticmethod
+    def _om_value(v) -> str:
+        v = float(v)
+        return repr(int(v)) if v == int(v) else repr(v)
+
+    def to_openmetrics(self) -> str:
+        """Render the registry as Prometheus/OpenMetrics exposition text:
+        counters as ``<name>_total``, gauges bare, histograms as cumulative
+        ``_bucket{le=...}`` series plus ``_sum``/``_count``. Source metrics
+        (pull-style subsystem tallies) export as gauges under their
+        namespace. This is the scrape endpoint payload for serving-layer
+        deployments — pair with ``engine.health()``, whose verdicts land
+        here as ``health_*`` gauges."""
+        with self._lock:
+            metrics = sorted(self._metrics.items())
+            sources = sorted(self._sources.items())
+        lines: list[str] = []
+        for name, m in metrics:
+            n = self._om_name(name)
+            if isinstance(m, Counter):
+                lines += [f"# TYPE {n} counter",
+                          f"{n}_total {self._om_value(m.value)}"]
+            elif isinstance(m, Gauge):
+                lines += [f"# TYPE {n} gauge",
+                          f"{n} {self._om_value(m.value)}"]
+            else:                                   # Histogram
+                lines.append(f"# TYPE {n} histogram")
+                cum = 0
+                for bound, c in zip(m.bounds, m.counts):
+                    cum += int(c)
+                    lines.append(f'{n}_bucket{{le="{bound:g}"}} {cum}')
+                lines.append(f'{n}_bucket{{le="+Inf"}} {m.count}')
+                lines += [f"{n}_sum {self._om_value(m.sum)}",
+                          f"{n}_count {m.count}"]
+        for ns, fn in sources:
+            try:
+                vals = fn()
+            except Exception:       # a dead source never breaks a scrape
+                continue
+            for k, v in sorted(vals.items()):
+                n = self._om_name(f"{ns}.{k}")
+                lines += [f"# TYPE {n} gauge", f"{n} {self._om_value(v)}"]
+        lines.append("# EOF")
+        return "\n".join(lines) + "\n"
+
     def __len__(self):
         return len(self._metrics)
 
@@ -261,9 +322,9 @@ _DEFAULT_REGISTRY = Registry()
 
 
 def default_registry() -> Registry:
-    """Process-global registry — the back-compat home of formerly
-    module-global counters (``deltastore.WRITE_COUNTERS``). New code should
-    prefer a per-engine / per-test Registry."""
+    """Process-global registry for callers that want one shared sink.
+    New code should prefer a per-engine / per-test Registry (write-path
+    counters live per graph in ``Graph.write_counters``)."""
     return _DEFAULT_REGISTRY
 
 

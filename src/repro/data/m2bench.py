@@ -24,8 +24,8 @@ from ..core.storage import Database, DictColumn, Graph, Table
 
 N_TAGS = 200
 FOOD_TAGS = 40          # tag ids [0, 40) are food-related
-PRODUCT_TITLES = ["Yogurt", "Milk", "Bread", "Coffee", "Tea", "Chocolate",
-                  "Laptop", "Phone", "Book", "Desk"]
+PRODUCT_TITLES = ("Yogurt", "Milk", "Bread", "Coffee", "Tea", "Chocolate",
+                  "Laptop", "Phone", "Book", "Desk")
 
 
 def generate(sf: int = 1, seed: int = 0) -> Database:

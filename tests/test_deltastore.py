@@ -239,13 +239,12 @@ def test_write_path_performs_no_rebuild_work():
                           "tvid": rng.integers(0, n, e).astype(np.int64),
                           "w": np.zeros(e, np.int64)}),
               "A", "A")
-    base_fwd, base_rev = g.fwd, g.rev
-    deltastore.WRITE_COUNTERS.reset()
+    base_fwd, base_rev = g.fwd, g.rev      # fresh graph: counters start at 0
     g.insert_edges({"svid": rng.integers(0, n, b).astype(np.int64),
                     "tvid": rng.integers(0, n, b).astype(np.int64),
                     "w": np.zeros(b, np.int64)})
     g.delete_edges(np.arange(10))
-    c = deltastore.WRITE_COUNTERS
+    c = g.write_counters
     assert c.compactions == 0 and c.compact_ops == 0
     assert g.fwd is base_fwd and g.rev is base_rev  # no rebuild happened
     assert c.write_ops <= 20 * b                    # O(b log b), nowhere near e

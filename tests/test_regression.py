@@ -1,0 +1,136 @@
+"""Unit tests for the perf-regression gate (benchmarks.regression): metric
+flattening, noise-aware tolerance bands, compare semantics, and baseline
+merge. All synthetic — no benchmark suites run here."""
+import json
+import os
+
+import pytest
+
+from benchmarks import regression
+
+pytestmark = pytest.mark.fast
+
+
+ROWS = [
+    {"table": "gcdi_ablation", "query": "Q1", "gredo_s": 0.010,
+     "speedup_vs_single": 5.0, "speedup_vs_dual": 2.0,
+     "gredo_io": 100, "single_io": 900, "sf": 1},
+    {"table": "graph_workloads", "query": "G6_sp", "gredo_s": 0.020},
+    {"table": "gcda_ablation", "task": "A3_multiply", "batch_s": 0.030,
+     "speedup": 3.0},
+    {"table": "interbuffer_reuse", "cold_s": 0.40, "warm_s": 0.10,
+     "reuse_speedup": 4.0},
+    {"table": "not_gated", "query": "X", "gredo_s": 99.0},
+    {"table": "gcdi_ablation", "query": "Q2", "gredo_s": None},  # non-numeric
+]
+
+
+def test_metrics_from_rows_flattening():
+    m = regression.metrics_from_rows(ROWS)
+    assert m["gcdi_ablation.Q1.gredo_s"] == (0.010, "seconds")
+    assert m["gcdi_ablation.Q1.speedup_vs_single"] == (5.0, "ratio")
+    assert m["gcdi_ablation.Q1.gredo_io"] == (100.0, "count")
+    assert m["graph_workloads.G6_sp.gredo_s"] == (0.020, "seconds")
+    assert m["gcda_ablation.A3_multiply.speedup"] == (3.0, "ratio")
+    assert m["interbuffer_reuse.reuse_speedup"] == (4.0, "ratio")
+    assert not any(k.startswith("not_gated") for k in m)
+    assert "gcdi_ablation.Q2.gredo_s" not in m        # None dropped
+
+
+def _samples(*vals, kind="ratio", name="m"):
+    return [{name: (v, kind)} for v in vals]
+
+
+def test_build_baseline_tolerance_floor_and_spread():
+    # tight samples -> the kind floor wins
+    doc = regression.build_baseline(_samples(2.0, 2.0, 2.0))
+    spec = doc["metrics"]["m"]
+    assert spec["value"] == 2.0 and spec["kind"] == "ratio"
+    assert spec["tol"] == regression.TOL_FLOORS["ratio"]
+    assert spec["samples"] == [2.0, 2.0, 2.0]
+
+    # noisy samples -> 3x relative spread beats the floor
+    doc = regression.build_baseline(_samples(1.0, 2.0, 3.0))
+    assert doc["metrics"]["m"]["tol"] == pytest.approx(3.0 * (2.0 / 2.0))
+
+    # pathological spread is capped
+    doc = regression.build_baseline(_samples(0.001, 10.0, 20.0))
+    assert doc["metrics"]["m"]["tol"] == regression.TOL_CAP
+
+
+def test_compare_directionality():
+    baseline = regression.build_baseline([{
+        "r": (2.0, "ratio"), "s": (1.0, "seconds"), "c": (100.0, "count"),
+    }])
+    # within band: ratio may grow freely, seconds/count may shrink freely
+    regs, notes = regression.compare(
+        {"r": (9.0, "ratio"), "s": (0.01, "seconds"), "c": (1.0, "count")},
+        baseline)
+    assert regs == [] and notes == []
+    # ratio dropping below (1 - tol) trips; tol floor for ratio is 40%
+    regs, _ = regression.compare(
+        {"r": (1.0, "ratio"), "s": (1.0, "seconds"), "c": (100.0, "count")},
+        baseline)
+    assert len(regs) == 1 and "ratio dropped" in regs[0]
+    # seconds growing past (1 + tol) trips; floor is 100% (>2x)
+    regs, _ = regression.compare(
+        {"r": (2.0, "ratio"), "s": (2.5, "seconds"), "c": (100.0, "count")},
+        baseline)
+    assert len(regs) == 1 and "seconds grew" in regs[0]
+    # counts are near-exact (2% floor)
+    regs, _ = regression.compare(
+        {"r": (2.0, "ratio"), "s": (1.0, "seconds"), "c": (103.0, "count")},
+        baseline)
+    assert len(regs) == 1 and "count grew" in regs[0]
+
+
+def test_compare_vanished_and_new_metrics():
+    baseline = regression.build_baseline([{"old": (2.0, "ratio")}])
+    regs, notes = regression.compare({"new": (1.0, "ratio")}, baseline)
+    assert len(regs) == 1 and "vanished" in regs[0]
+    assert len(notes) == 1 and "not baselined" in notes[0]
+
+
+def test_median_sample():
+    med = regression._median_sample(_samples(1.0, 5.0, 2.0))
+    assert med["m"] == (2.0, "ratio")
+
+
+def test_update_baseline_merges_uncovered_metrics(tmp_path):
+    path = str(tmp_path / "baselines.json")
+    regression.update_baseline_from_samples(
+        [{"a": (1.0, "seconds"), "b": (2.0, "ratio")}], sf=1, path=path)
+    # second run re-measures only "b": "a" must survive the merge
+    regression.update_baseline_from_samples(
+        [{"b": (3.0, "ratio")}], sf=1, path=path)
+    doc = json.load(open(path))
+    assert doc["metrics"]["a"]["value"] == 1.0
+    assert doc["metrics"]["b"]["value"] == 3.0
+    assert list(doc["metrics"]) == sorted(doc["metrics"])
+
+
+def test_committed_baseline_covers_gated_suites():
+    """The committed baseline must exist and carry the paper's headline
+    metrics — the CI gate exits 2 (hard fail) without it."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        regression.BASELINE_PATH)
+    doc = json.load(open(path))
+    names = set(doc["metrics"])
+    assert any(n.startswith("graph_workloads.") for n in names)
+    assert any(n.startswith("gcda_ablation.") and n.endswith(".speedup")
+               for n in names)
+    assert "interbuffer_reuse.reuse_speedup" in names
+    for spec in doc["metrics"].values():
+        assert spec["kind"] in regression.TOL_FLOORS
+        assert 0.0 < spec["tol"] <= regression.TOL_CAP
+
+
+def test_slowdown_hook_patches_and_restores():
+    from repro.core.engine import GredoEngine
+    orig = GredoEngine.query
+    patch = regression._Slowdown(0.001)
+    try:
+        assert GredoEngine.query is not orig
+    finally:
+        patch.undo()
+    assert GredoEngine.query is orig

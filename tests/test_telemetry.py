@@ -125,21 +125,19 @@ def test_registry_snapshot_delta_across_write_burst(db):
     assert g.vertex_tables["Tags"].nrows == n0 + 3
 
 
-def test_write_counters_per_graph_and_deprecated_alias(db):
+def test_write_counters_per_graph(db):
+    # per-graph counters are the only write-path accounting now (the
+    # module-global WRITE_COUNTERS alias is gone); the registry exposes
+    # them namespaced per graph
     g1 = db.graphs["Follows"]
-    deltastore.WRITE_COUNTERS.reset()
+    assert not hasattr(deltastore, "WRITE_COUNTERS")
     b0 = g1.write_counters.write_batches
     g1.insert_edges({"svid": np.array([0]), "tvid": np.array([1]),
                      "since": np.array([2020])})
     assert g1.write_counters.write_batches == b0 + 1
-    # the module-global alias mirrors per-graph charges via the default
-    # registry — the pre-existing benchmark/test reset+read pattern
-    assert deltastore.WRITE_COUNTERS.write_batches == 1
-    assert deltastore.WRITE_COUNTERS.write_rows == 1
-    deltastore.WRITE_COUNTERS.reset()
-    assert deltastore.WRITE_COUNTERS.write_batches == 0
-    # ...but resetting the global view never clears per-graph history
-    assert g1.write_counters.write_batches == b0 + 1
+    eng = GredoEngine(db, telemetry=True)
+    snap = eng.telemetry.registry.snapshot()
+    assert snap["deltastore.Follows.write_batches"] == b0 + 1
 
 
 def test_per_query_interbuffer_delta(db):
@@ -283,3 +281,55 @@ def test_trace_collector_bounded():
     assert total <= 10 or len(coll.traces) == 1
     assert coll.dropped_spans > 0
     assert coll.last().label == "q7"    # newest trace always survives
+
+
+def test_empty_histogram_summary_is_finite():
+    h = telemetry.Histogram("e")
+    s = h.summary()
+    assert s == {"count": 0, "sum": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
+    json.dumps(s)                       # strict-JSON safe (no NaN)
+    # percentile() itself still says "no data" with NaN (asserted above in
+    # test_histogram_percentiles) — only the snapshot view is zero-filled
+
+
+def test_registry_to_openmetrics_exposition():
+    reg = Registry()
+    reg.counter("engine.queries").inc(3)
+    reg.gauge("pool.bytes").set(1.5)
+    h = reg.histogram("engine.query_seconds")
+    h.observe(0.002)
+    h.observe(5.0)
+    reg.register_source("ib", lambda: {"hits": 7, "rate": 0.25})
+    text = reg.to_openmetrics()
+    lines = text.splitlines()
+    assert "# TYPE engine_queries counter" in lines
+    assert "engine_queries_total 3" in lines
+    assert "# TYPE pool_bytes gauge" in lines
+    assert "pool_bytes 1.5" in lines
+    # histogram: cumulative buckets, +Inf catch-all, sum/count
+    assert "# TYPE engine_query_seconds histogram" in lines
+    buckets = [l for l in lines
+               if l.startswith("engine_query_seconds_bucket")]
+    assert buckets[-1] == 'engine_query_seconds_bucket{le="+Inf"} 2'
+    counts = [int(l.rsplit(" ", 1)[1]) for l in buckets]
+    assert counts == sorted(counts)     # cumulative, monotone
+    assert "engine_query_seconds_count 2" in lines
+    assert any(l.startswith("engine_query_seconds_sum 5.002") for l in lines)
+    # pull sources export as gauges under a sanitized namespace
+    assert "ib_hits 7" in lines and "ib_rate 0.25" in lines
+    assert lines[-1] == "# EOF" and text.endswith("\n")
+    # names obey the OpenMetrics grammar
+    for l in lines:
+        if not l.startswith("#"):
+            name = l.split(" ")[0].split("{")[0]
+            assert telemetry.Registry._om_name(name) == name
+
+
+def test_engine_openmetrics_end_to_end(db):
+    eng = GredoEngine(db, telemetry=True)
+    eng.query(m2bench.q_g1())
+    eng.health()
+    text = eng.telemetry.registry.to_openmetrics()
+    assert "engine_queries_total 1" in text
+    assert "health_status" in text      # health gauges ride along
+    assert "flight_records 1" in text   # flight-recorder source too
